@@ -1,0 +1,51 @@
+"""Shared benchmark utilities: scheduler grids, CSV rows, result persistence."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+from repro.core.service import ServiceModel
+from repro.serving.engine import EngineConfig, SimBackend
+from repro.serving.run import run_experiment
+from repro.serving.workload import WorkloadSpec
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "bench")
+
+
+def grid(schedulers: List[str], spec: WorkloadSpec,
+         service: Optional[ServiceModel] = None,
+         engine_cfg: Optional[EngineConfig] = None,
+         backend: Optional[SimBackend] = None,
+         sched_kwargs_by_name: Optional[Dict[str, dict]] = None,
+         warmup: int = 256) -> List[dict]:
+    rows = []
+    for name in schedulers:
+        t0 = time.time()
+        s = run_experiment(
+            name, spec=spec, service=service, engine_cfg=engine_cfg,
+            backend=backend, warmup=warmup,
+            sched_kwargs=(sched_kwargs_by_name or {}).get(name))
+        row = s.row()
+        row["scheduler"] = name
+        row["wall_s"] = round(time.time() - t0, 1)
+        row["per_type"] = s.per_type
+        row["gain_timeline"] = [round(x, 1) for x in s.gain_timeline]
+        rows.append(row)
+    return rows
+
+
+def save(bench: str, rows: List[dict]):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, bench + ".json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+
+
+def emit(bench: str, rows: List[dict], fields: List[str]):
+    """Print compact CSV lines: bench,<key fields>."""
+    for r in rows:
+        vals = ",".join(str(r.get(f, "")) for f in fields)
+        print(f"{bench},{vals}", flush=True)

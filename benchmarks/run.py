@@ -1,0 +1,85 @@
+"""Benchmark runner — one function per paper table/figure (see
+benchmarks/paper_figs.py) plus the kernel micro-bench.  Prints
+``bench,key=value,...`` CSV lines and persists JSON under
+experiments/bench/.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig13_load] [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _kernel_bench() -> list:
+    """Interpret-mode per-call cost + analytic HBM traffic of the Pallas
+    kernels (real TPU timings require hardware; the roofline table covers
+    the perf model)."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.paged_attention import paged_attention
+    rng = np.random.default_rng(0)
+    rows = []
+    B, S, H, KV, D = 1, 512, 4, 4, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    t0 = time.perf_counter()
+    flash_attention(q, k, v, block_q=128, block_k=128,
+                    interpret=True).block_until_ready()
+    dt = time.perf_counter() - t0
+    hbm = (q.size + k.size + v.size + q.size) * 4
+    rows.append(dict(kernel="flash_attention", shape=f"B{B}S{S}H{H}D{D}",
+                     interpret_ms=round(1e3 * dt, 1),
+                     kernel_hbm_bytes=hbm,
+                     xla_path_bytes_est=int(2 * B * H * S * S * 4 * 3)))
+    page, P, nmax = 128, 16, 4
+    q2 = jnp.asarray(rng.normal(size=(8, H, D)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, page, KV, D)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, page, KV, D)), jnp.float32)
+    tb = jnp.asarray(rng.integers(0, P, size=(8, nmax)).astype(np.int32))
+    cx = jnp.asarray(np.full(8, nmax * page, np.int32))
+    t0 = time.perf_counter()
+    paged_attention(q2, kp, vp, tb, cx, interpret=True).block_until_ready()
+    rows.append(dict(kernel="paged_attention", shape=f"B8ctx{nmax*page}",
+                     interpret_ms=round(1e3 * (time.perf_counter() - t0), 1),
+                     kernel_hbm_bytes=int(8 * nmax * page * KV * D * 4 * 2)))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale durations (slower)")
+    args = ap.parse_args()
+
+    from benchmarks.common import save
+    from benchmarks.paper_figs import ALL
+
+    benches = dict(ALL)
+    benches["kernels"] = lambda quick=True: _kernel_bench()
+    names = [n for n in benches if (not args.only or args.only in n)]
+
+    t_all = time.time()
+    for name in names:
+        t0 = time.time()
+        try:
+            rows = benches[name](quick=not args.full)
+        except Exception as e:  # pragma: no cover
+            print(f"{name},ERROR,{e!r}", flush=True)
+            raise
+        save(name, rows)
+        for r in rows:
+            kv = ",".join(f"{k}={v}" for k, v in r.items()
+                          if not isinstance(v, (list, dict)))
+            print(f"{name},{kv}", flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    print(f"# all benchmarks done in {time.time()-t_all:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

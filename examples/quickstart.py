@@ -1,0 +1,33 @@
+"""Quickstart: SLO-aware serving with Tempo vs FCFS in ~1 minute.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Generates a mixed-SLO workload (latency-streaming chat, deadline'd
+throughput jobs, collective agent DAGs — paper §2.1), serves it on a
+simulated 8×TPU-v5e Llama-8B replica, and compares Tempo's service gain /
+SLO goodput against vLLM-style FCFS.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.serving.run import run_experiment           # noqa: E402
+from repro.serving.workload import WorkloadSpec        # noqa: E402
+
+spec = WorkloadSpec(rate=8.0, duration=90.0, seed=0)
+
+print(f"{'scheduler':<16} {'gain':>12} {'goodput':>9} {'tok/s':>9} "
+      f"{'lat met':>8} {'thr met':>8} {'coll met':>9}")
+for name in ("vllm", "sarathi", "tempo"):
+    s = run_experiment(name, spec=spec)
+    pt = s.per_type
+    get = lambda k: pt.get(k, {}).get("slo_met", float("nan"))
+    print(f"{name:<16} {s.service_gain:>12.0f} {s.goodput_frac:>9.3f} "
+          f"{s.throughput_tok_s:>9.0f} {get('latency'):>8.2f} "
+          f"{get('throughput'):>8.2f} {get('collective'):>9.2f}")
+
+print("\nTempo allocates just-enough bandwidth per SLO (paced streaming, "
+      "deadline-pressure density, stage-budgeted DAGs) -> higher goodput "
+      "at ~equal raw throughput.")

@@ -1,0 +1,19 @@
+"""Insert roofline tables into EXPERIMENTS.md placeholders."""
+import re, subprocess, sys
+
+single = subprocess.run(
+    [sys.executable, "-m", "repro.launch.report"],
+    capture_output=True, text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+    cwd="/root/repo").stdout.strip()
+multi = subprocess.run(
+    [sys.executable, "-m", "repro.launch.report", "--multi-pod"],
+    capture_output=True, text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+    cwd="/root/repo").stdout.strip()
+
+md = open("/root/repo/EXPERIMENTS.md").read()
+md = re.sub(r"<!-- ROOFLINE_TABLE_SINGLE -->(.|\n)*?(?=\n### Multi-pod)",
+            "<!-- ROOFLINE_TABLE_SINGLE -->\n" + single + "\n", md)
+md = re.sub(r"<!-- ROOFLINE_TABLE_MULTI -->(.|\n)*?(?=\nReading the table)",
+            "<!-- ROOFLINE_TABLE_MULTI -->\n" + multi + "\n", md)
+open("/root/repo/EXPERIMENTS.md", "w").write(md)
+print("tables inserted:", len(single.splitlines()), "+", len(multi.splitlines()), "rows")

@@ -1,0 +1,81 @@
+"""SLO Tracker (paper §3.2 ③): runtime metrics + token-speed profile.
+
+Token processing speed is stable and predictable (paper fig. 8): TTFT/TBT
+depend on context length and batch composition, not prompt content.  The
+tracker maintains EWMA profiles of prefill throughput (tokens/s) and decode
+step time, refreshed online from executed steps, and converts length
+estimates into time estimates for the scheduler."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass
+class SpeedProfile:
+    prefill_tps: float = 50_000.0    # prompt tokens/s when given full budget
+    decode_step: float = 0.03        # s per engine step (one token/seq)
+    ewma: float = 0.05
+    samples: int = 0
+
+    def update(self, step_time: float, prefill_tokens: int,
+               decode_seqs: int):
+        self.samples += 1
+        if prefill_tokens > 0 and step_time > 0:
+            tps = prefill_tokens / step_time
+            self.prefill_tps += self.ewma * (tps - self.prefill_tps)
+        if decode_seqs > 0:
+            self.decode_step += self.ewma * (step_time - self.decode_step)
+
+
+class SLOTracker:
+    def __init__(self):
+        self.profile = SpeedProfile()
+        self.history_tbt: List[float] = []
+
+    # ------------------------------------------------------------------
+    def on_step(self, step_time: float, prefill_tokens: int,
+                decode_seqs: int):
+        self.profile.update(step_time, prefill_tokens, decode_seqs)
+
+    # ------------------------------------------------------------------
+    def est_prefill_time(self, tokens: int) -> float:
+        return tokens / max(self.profile.prefill_tps, 1.0)
+
+    def est_decode_time(self, tokens: float) -> float:
+        return tokens * self.profile.decode_step
+
+    def est_remaining_time(self, req: Request, est_total_out: float) -> float:
+        """Remaining service time if scheduled continuously from now."""
+        rem_out = max(est_total_out - req.decoded, 1.0)
+        return self.est_prefill_time(req.prefill_remaining) \
+            + self.est_decode_time(rem_out)
+
+    def est_ttlt(self, req: Request, now: float,
+                 est_total_out: float) -> float:
+        return (now - req.arrival) + self.est_remaining_time(
+            req, est_total_out)
+
+    # ------------------------------------------------------------------
+    def tokens_behind(self, req: Request, now: float) -> float:
+        """How many tokens behind the SLO delivery timeline a latency request
+        is (>0 = lagging) — cumulative view, used for reporting."""
+        if req.slo.kind != "latency":
+            return 0.0
+        due_elapsed = now - req.arrival - req.slo.ttft
+        expected = due_elapsed / max(req.slo.tbt, 1e-6) + 1.0
+        if req.first_token_t is None:
+            return max(expected, 0.0) if due_elapsed > -0.25 else 0.0
+        return expected - req.decoded
+
+    def token_due_frac(self, req: Request, now: float) -> float:
+        """Per-token pacing signal: fraction of the TBT interval elapsed
+        since the LAST emitted token (>1 = this token is already late).
+        Eq. 3 credits each token individually, so pacing keys off the gap
+        since the last token, not a cumulative schedule."""
+        if not req.token_times:
+            return 2.0   # TTFT pending: treated as urgent elsewhere
+        return (now - req.token_times[-1]) / max(req.slo.tbt, 1e-6)

@@ -1,0 +1,1 @@
+from repro.kernels.ops import flash_attention, paged_attention  # noqa: F401

@@ -1,0 +1,38 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute with ``interpret=True`` (Pallas
+interpreter runs the kernel body in Python — correctness validation).  On a
+real TPU set ``interpret=False`` (default resolves by backend).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.paged_attention import paged_attention as _paged
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                    interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _paged(q, k_pages, v_pages, block_tables, ctx_lens,
+                  interpret=interpret)

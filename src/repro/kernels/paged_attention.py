@@ -1,0 +1,110 @@
+"""Pallas TPU paged decode attention (serving hot spot).
+
+One query token per sequence attends over a paged KV cache.  The per-sequence
+block table and context lengths are SCALAR-PREFETCHED (pltpu
+PrefetchScalarGridSpec): the kv-page BlockSpec's index_map reads the table to
+pull exactly the pages this sequence owns from HBM into VMEM — the Pallas
+equivalent of PagedAttention's gather, without materialising a contiguous KV.
+
+Pages are 128 tokens (lane-aligned; the GPU artifact uses 16-token pages —
+TPU adaptation recorded in DESIGN.md §3).  Grid: (batch, n_pages_max); VMEM
+scratch carries online-softmax state across pages; tokens past the sequence's
+context length are masked.  Working set per step: one page (128×KV×D) + q
+(H×D) + acc (H×D) f32 ≈ 0.8 MB at KV=8, D=128 — comfortably inside VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _HAS_TPU = True
+except Exception:  # pragma: no cover
+    pltpu = None
+    _HAS_TPU = False
+
+NEG_INF = -1e30
+
+
+def _kernel(tables_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale: float, page: int, npages: int,
+            G: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                   # (H, D)
+    k = k_ref[0].astype(jnp.float32)                   # (page, KV, D)
+    v = v_ref[0].astype(jnp.float32)
+    H, D = q.shape
+    KV = k.shape[1]
+    qg = q.reshape(KV, G, D)
+
+    s = jax.lax.dot_general(
+        qg, k, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32) * scale     # (KV, G, page)
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (KV, G, page), 2)
+    live = pos < ctx_ref[b]
+    s = jnp.where(live, s, NEG_INF)
+
+    m_prev = m_scr[...]                                 # (KV, G)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=2))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=2)
+    pv = jax.lax.dot_general(
+        p, v, (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)             # (KV, G, D)
+    acc_scr[...] = acc_scr[...] * corr[..., None] + pv
+    m_scr[...] = m_new
+
+    @pl.when(j == npages - 1)
+    def _finish():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = out.reshape(H, D).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                    scale=None, interpret: bool = False):
+    """q: (B,H,D); k/v_pages: (P, page, KV, D); block_tables: (B, n_max)
+    int32; ctx_lens: (B,) int32.  Returns (B,H,D)."""
+    B, H, D = q.shape
+    P, page, KV, _ = k_pages.shape
+    n_max = block_tables.shape[1]
+    G = H // KV
+    scale = scale or D ** -0.5
+
+    kernel = functools.partial(_kernel, scale=scale, page=page,
+                               npages=n_max, G=G)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, n_max),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, j, tab, ctx: (b, 0, 0)),
+            pl.BlockSpec((1, page, KV, D),
+                         lambda b, j, tab, ctx: (tab[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, page, KV, D),
+                         lambda b, j, tab, ctx: (tab[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, j, tab, ctx: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((KV, G), jnp.float32),
+            pltpu.VMEM((KV, G), jnp.float32),
+            pltpu.VMEM((KV, G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, ctx_lens, q, k_pages, v_pages)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """q: (B,S,H,D); k/v: (B,S,KV,D) with KV | H (GQA).  f32 softmax."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale or D ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, S, KV, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, S, H, D).astype(q.dtype)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                        scale=None):
+    """Decode attention over a paged KV cache.
+
+    q: (B,H,D); k_pages/v_pages: (P, page, KV, D);
+    block_tables: (B, n_max) int32; ctx_lens: (B,) int32.
+    """
+    B, H, D = q.shape
+    P, page, KV, _ = k_pages.shape
+    n_max = block_tables.shape[1]
+    G = H // KV
+    scale = scale or D ** -0.5
+
+    k = k_pages[block_tables]            # (B, n_max, page, KV, D)
+    v = v_pages[block_tables]
+    k = k.reshape(B, n_max * page, KV, D).astype(jnp.float32)
+    v = v.reshape(B, n_max * page, KV, D).astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k) * scale
+    pos = jnp.arange(n_max * page)
+    mask = pos[None, :] < ctx_lens[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", w, v)
+    return o.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,208 @@
+"""Sharding policy: logical param/cache/input PartitionSpecs per phase.
+
+Scheme (DESIGN.md §4):
+
+Params, ``fsdp`` mode (train / prefill / decode-baseline)
+  Generic leaves are storage-sharded on the largest dim divisible by
+  data·model ('data','model'), falling back to 'model', else 'data', else
+  replicated; XLA all-gathers at use (one layer at a time under the unit
+  scan).  MoE expert weights are pinned to P('model' [expert dim],
+  'data' [d_model], None) to line up with the shard_map EP path.
+
+Params, ``tp`` mode (decode-optimized)
+  Megatron-style resident weights: attention projections shard head_dim,
+  MLP shards d_ff, lm_head shards vocab.  Activations at decode are tiny;
+  scores/partial sums are all-reduced.  See EXPERIMENTS.md §Perf.
+
+Activations
+  batch over ('pod','data') (longest dividing prefix), sequence over
+  ('model',); recurrent-only archs (xLSTM) keep the sequence unsharded and
+  let the batch absorb 'model' too.
+
+Caches (decode)
+  attention KV: sequence over 'model' (flash-decode partial softmax), or
+  head_dim over 'model' in tp mode; recurrent states shard their feature dim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.partition import AxisCtx, best_axes
+
+
+# ---------------------------------------------------------------------------
+# AxisCtx factory
+# ---------------------------------------------------------------------------
+def recurrent_only(cfg: ModelConfig) -> bool:
+    pats = cfg.prefix_pattern + cfg.unit_pattern
+    return all(m in ("mlstm", "slstm") for m, _ in pats)
+
+
+def make_ctx(cfg: ModelConfig, mesh: Optional[Mesh], phase: str,
+             *, decode_tp: bool = False, attn_schedule: str = "rect",
+             attn_chunk: int = 1024, ep: bool = True) -> AxisCtx:
+    multi = mesh is not None and "pod" in mesh.shape
+    # 'pod' is a pure DP axis (batch); sequence shards over 'model'.
+    # xLSTM's mLSTM quadratic form is attention-like and seq-shards too
+    # (sLSTM layers gather the sequence internally, see xlstm.py) — except
+    # in TRAINING, where the sLSTM backward over a gathered sequence blows
+    # up (measured: 47s -> 655s memory term); there the batch absorbs the
+    # model axis instead (B=1/chip, sequence local).  EXPERIMENTS.md §Perf.
+    if recurrent_only(cfg) and phase == "train":
+        batch = ("pod", "data", "model") if multi else ("data", "model")
+        seq = ()
+    else:
+        batch = ("pod", "data") if multi else ("data",)
+        seq = ("model",)
+    return AxisCtx(mesh=mesh, phase=phase, batch=batch, seq=seq,
+                   ep=ep and cfg.num_experts > 0,
+                   decode_tp=decode_tp, attn_schedule=attn_schedule,
+                   attn_chunk=attn_chunk)
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+def _generic_spec(mesh: Mesh, shape) -> P:
+    """Largest dim divisible by data*model -> ('data','model'); else 'model';
+    else 'data'; else replicated."""
+    for axes in (("data", "model"), ("model",), ("data",)):
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        best, best_dim = -1, None
+        for i, s in enumerate(shape):
+            if s % n == 0 and s >= n and s > best:
+                best, best_dim = s, i
+        if best_dim is not None:
+            spec = [None] * len(shape)
+            spec[best_dim] = tuple(axes) if len(axes) > 1 else axes[0]
+            return P(*spec)
+    return P(*([None] * len(shape)))
+
+
+_ATTN_TP = {  # name -> dim index (after stack strip) sharded over 'model'
+    "wq": 2, "wk": 2, "wv": 2,        # (d, H, hd) -> hd
+    "wo": 1,                          # (H, hd, d) -> hd
+    "w_gate": 1, "w_up": 1,           # (d, f) -> f
+    "w_down": 0,                      # (f, d) -> f
+    "shared_gate": 1, "shared_up": 1, "shared_down": 0,
+    "lm_head": 1,                     # (d, V)
+    "w_uk": 0, "w_uv": 0,             # (r, H, ·) -> r?  keep replicated
+}
+
+
+def param_pspec(cfg: ModelConfig, mesh: Mesh, path, shape,
+                mode: str = "fsdp") -> P:
+    keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = keys[-1]
+    stacked = "units" in keys
+    inner = shape[1:] if stacked else shape
+
+    def restack(spec: P) -> P:
+        return P(None, *spec) if stacked else spec
+
+    # MoE expert weights: pinned for the shard_map EP path.  fsdp mode
+    # storage-shards d_model (gathered at use); tp mode (decode) keeps
+    # weights RESIDENT with d_ff sharded over 'data' (tokens gathered).
+    is_expert = (cfg.num_experts > 0 and len(inner) == 3
+                 and inner[0] == cfg.num_experts
+                 and name in ("w_gate", "w_up", "w_down"))
+    if is_expert:
+        if mode == "tp":
+            dm_ix = 2 if name in ("w_gate", "w_up") else 1   # d_ff dim
+        else:
+            dm_ix = 1 if name in ("w_gate", "w_up") else 2   # d_model dim
+        spec = [None, None, None]
+        spec[0] = "model"
+        if inner[dm_ix] % mesh.shape["data"] == 0:
+            spec[dm_ix] = "data"
+        return restack(P(*spec))
+
+    if mode == "tp" and name in _ATTN_TP and not is_expert:
+        dim = _ATTN_TP[name]
+        if dim < len(inner) and inner[dim] % mesh.shape["model"] == 0 \
+                and name not in ("w_uk", "w_uv"):
+            spec = [None] * len(inner)
+            spec[dim] = "model"
+            return restack(P(*spec))
+        return restack(P(*([None] * len(inner))))
+
+    return restack(_generic_spec(mesh, inner))
+
+
+def params_shardings(cfg: ModelConfig, mesh: Mesh, params_tree,
+                     mode: str = "fsdp"):
+    def f(path, leaf):
+        return NamedSharding(mesh, param_pspec(cfg, mesh, path, leaf.shape,
+                                               mode))
+    return jax.tree_util.tree_map_with_path(f, params_tree)
+
+
+def opt_shardings(cfg: ModelConfig, mesh: Mesh, opt_tree):
+    """Optimizer state: generic divisibility rule per leaf."""
+    def f(path, leaf):
+        return NamedSharding(mesh, _generic_spec(mesh, leaf.shape))
+    return jax.tree_util.tree_map_with_path(f, opt_tree)
+
+
+# ---------------------------------------------------------------------------
+# Cache + input specs
+# ---------------------------------------------------------------------------
+def cache_pspec(ctx: AxisCtx, path, shape) -> P:
+    keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = keys[-1]
+    stacked = "units" in keys
+    inner = shape[1:] if stacked else shape
+    mesh = ctx.mesh
+
+    def mk(*dims):
+        spec = [best_axes(mesh, s, a) for s, a in zip(inner, dims)]
+        return P(*([None] + spec)) if stacked else P(*spec)
+
+    b = ctx.batch
+    if name in ("k", "v"):            # (B, S, KV, hd)
+        if ctx.decode_tp:
+            return mk(b, None, None, ("model",))
+        return mk(b, ("model",), None, None)
+    if name == "ckv":                 # (B, S, r)
+        return mk(b, ("model",), None)
+    if name == "kr":                  # (B, S, rope)
+        return mk(b, ("model",), None)
+    if name == "conv":                # (B, dc-1, di)
+        return mk(b, None, ("model",))
+    if name == "ssm":                 # (B, di, ds)
+        return mk(b, ("model",), None)
+    if name == "C":                   # (B, H, dk, dv)
+        return mk(b, None, None, ("model",))
+    if name in ("n", "c", "h", "m"):
+        return mk(*([b] + [None] * (len(inner) - 1)))
+    return mk(*([b] + [None] * (len(inner) - 1)))
+
+
+def cache_shardings(ctx: AxisCtx, cache_tree):
+    def f(path, leaf):
+        return NamedSharding(ctx.mesh, cache_pspec(ctx, path, leaf.shape))
+    return jax.tree_util.tree_map_with_path(f, cache_tree)
+
+
+def batch_shardings(ctx: AxisCtx, batch_tree):
+    """tokens/labels (B,S) -> P(batch, seq); frames/patches (B,S,D)."""
+    mesh = ctx.mesh
+
+    def f(path, leaf):
+        dims = [ctx.batch, ctx.seq] + [None] * (len(leaf.shape) - 2)
+        spec = [best_axes(mesh, s, a) if a else None
+                for s, a in zip(leaf.shape, dims)]
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(f, batch_tree)
+
+
+def named(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))

@@ -1,0 +1,46 @@
+"""Step-function builders shared by dryrun.py, train.py and serve.py."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models.model import build_model
+from repro.training.optimizer import get_optimizer
+
+
+def make_train_step(cfg: ModelConfig, ctx, lr: float = 1e-4,
+                    grad_shardings=None):
+    model = build_model(cfg, ctx)
+    opt = get_optimizer(cfg, lr)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        if grad_shardings is not None:
+            # Pin gradients to the parameter sharding so the scan's stacked
+            # grad buffers stay sharded inside the while loop (otherwise XLA
+            # materialises replicated (U, ...) accumulators per chip).
+            grads = jax.tree.map(jax.lax.with_sharding_constraint,
+                                 grads, grad_shardings)
+        params, opt_state = opt.update(params, grads, opt_state)
+        return params, opt_state, loss
+
+    return model, opt, train_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx):
+    model = build_model(cfg, ctx)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return model, prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, ctx):
+    model = build_model(cfg, ctx)
+
+    def serve_step(params, caches, tokens, index):
+        return model.decode_step(params, caches, tokens, index)
+
+    return model, serve_step

@@ -1,0 +1,122 @@
+"""End-to-end training driver.
+
+CPU-runnable with --reduced (tiny same-family configs); on hardware the same
+driver drives the full configs on the production mesh.  Features: gradient
+accumulation (microbatching), int8 gradient compression with error feedback,
+checkpoint/restart (+ injected-failure drill), straggler monitoring.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --reduced --steps 60 --batch 8 --seq 128
+  PYTHONPATH=src python -m repro.launch.train --arch jamba-v0.1-52b \
+      --reduced --steps 30 --accum 2 --compress --fail-at 17
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.archs import reduced_config
+from repro.configs.base import get_config
+from repro.data.pipeline import DataConfig, PackedLoader
+from repro.models.model import build_model
+from repro.training.checkpoint import CheckpointManager
+from repro.training.compression import compress_grads, init_error_feedback
+from repro.training.fault_tolerance import TrainSupervisor
+from repro.training.optimizer import get_optimizer
+
+
+def make_accum_train_step(model, opt, accum: int = 1, compress: bool = False):
+    """fwd/bwd over `accum` microbatches with a single deferred gradient
+    reduction (compute/comm overlap: the psum XLA inserts happens once per
+    accumulation window, not per microbatch)."""
+
+    def micro_loss(params, batch):
+        return model.loss(params, batch)
+
+    def step(params, state, batch):
+        opt_state, ef = state
+        if accum == 1:
+            loss, grads = jax.value_and_grad(micro_loss)(params, batch)
+        else:
+            def body(carry, mb):
+                acc, lsum = carry
+                loss, g = jax.value_and_grad(micro_loss)(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, lsum + loss), None
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (grads, lsum), _ = jax.lax.scan(body, (zeros, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = lsum / accum
+        if compress:
+            grads, ef = compress_grads(grads, ef)
+        params, opt_state = opt.update(params, grads, opt_state)
+        return params, (opt_state, ef), loss
+
+    return step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a node failure at this step (FT drill)")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    model = build_model(cfg)
+    opt = get_optimizer(cfg, lr=args.lr)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    ef = init_error_feedback(params)
+
+    step_fn = jax.jit(make_accum_train_step(model, opt, args.accum,
+                                            args.compress))
+
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch)
+    loader = PackedLoader(dcfg)
+
+    ckpt = CheckpointManager(args.ckpt_dir, keep=3)
+    sup = TrainSupervisor(step_fn, ckpt, ckpt_every=args.ckpt_every)
+
+    def make_batches(start_step):
+        it = iter(loader)
+        def gen():
+            while True:
+                b = next(it)
+                yield {k: jnp.asarray(v) for k, v in b.items()}
+        return gen()
+
+    t0 = time.time()
+    out = sup.run_with_recovery(params, (opt_state, ef), make_batches,
+                                args.steps, fail_at_step=args.fail_at)
+    dt = time.time() - t0
+    ls = out["losses"]
+    print(f"arch={cfg.name} steps={out['final_step']} restarts={out['restarts']} "
+          f"loss[first5]={[round(x,3) for x in ls[:5]]} "
+          f"loss[last5]={[round(x,3) for x in ls[-5:]]} wall={dt:.1f}s "
+          f"stragglers={out['stragglers'][:5]}")
+    assert ls[-1] < ls[0], "loss did not decrease"
+    print("TRAIN OK")
+
+
+if __name__ == "__main__":
+    main()

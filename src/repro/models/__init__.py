@@ -1,0 +1,2 @@
+from repro.models.model import Model, build_model  # noqa: F401
+from repro.models.partition import NULL_CTX, AxisCtx  # noqa: F401

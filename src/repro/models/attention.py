@@ -1,0 +1,226 @@
+"""Attention: GQA and MLA (DeepSeek multi-head latent attention), with
+memory-bounded online-softmax and two causal schedules.
+
+Schedules (cf. DESIGN.md §4 and EXPERIMENTS.md §Perf):
+
+``rect``     — every query shard scans the full (masked) key context with a
+               `lax.scan` of online-softmax chunks.  Universally shardable
+               (q sequence over 'model'); computes the full S×S rectangle, so
+               HLO FLOPs carry ~2× the causal triangle.  This is the baseline.
+``triangle`` — python-unrolled query blocks with *static* causal key slices
+               `k[:, : (i+1)·blk]`: exact triangle FLOPs, still statically
+               shaped, each block's rows resharded over 'model'.  This is the
+               beyond-paper optimized schedule (hillclimbed in §Perf).
+
+Decode is flash-decoding style: one query row against the cache; the cache
+sequence dim is sharded over 'model' and XLA inserts the partial-softmax
+all-reduces (max & sum).  ``decode_tp`` shards head_dim instead (weights stay
+resident, scores are partially summed then all-reduced).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, rope_tables
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Online-softmax core
+# ---------------------------------------------------------------------------
+def online_attention(q, k, v, q_pos, k_pos0, *, scale, kv_chunk, causal=True):
+    """q: (B,Sq,KV,G,Dh), k/v: (B,Sk,KV,Dk/Dv); q_pos: (Sq,) absolute
+    positions; k positions are k_pos0 + arange(Sk).  Returns (B,Sq,KV,G,Dv).
+    """
+    B, Sq, KV, G, _ = q.shape
+    Sk = k.shape[1]
+    Dv = v.shape[-1]
+    kv_chunk = min(kv_chunk, Sk)
+    if Sk % kv_chunk:
+        kv_chunk = Sk  # fall back to a single chunk for odd sizes (tests)
+    nc = Sk // kv_chunk
+
+    qf = q.astype(jnp.float32)
+    kc = k.reshape(B, nc, kv_chunk, KV, -1)
+    vc = v.reshape(B, nc, kv_chunk, KV, Dv)
+    kc = jnp.moveaxis(kc, 1, 0)
+    vc = jnp.moveaxis(vc, 1, 0)
+    cpos = k_pos0 + jnp.arange(nc) * kv_chunk
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_i, v_i, p0 = xs
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qf, k_i.astype(jnp.float32)) * scale
+        if causal:
+            mask = q_pos[:, None] >= (p0 + jnp.arange(kv_chunk))[None, :]
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p, v_i.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KV, G, Dv), jnp.float32)
+    # flash-style: recompute chunk scores in the backward pass instead of
+    # saving (nc, B, Sq, KV, G, chunk) f32 score tensors
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, cpos))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out
+
+
+def causal_attention(q, k, v, ctx, *, scale):
+    """Dispatch on schedule.  q: (B,S,H,Dh) (full heads); k/v: (B,S,KV,·)."""
+    B, S, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, Dh)
+    q_pos = jnp.arange(S)
+
+    if ctx.attn_schedule == "triangle" and S % 16 == 0 and S >= 16:
+        nblk = min(16, S // 16)
+        blk = S // nblk
+        outs = []
+        for i in range(nblk):
+            qi = qg[:, i * blk:(i + 1) * blk]
+            qi = ctx.cs(qi, ctx.batch, ctx.seq, None, None, None)
+            ctx_len = (i + 1) * blk
+            ki, vi = k[:, :ctx_len], v[:, :ctx_len]
+            oi = online_attention(qi, ki, vi, q_pos[i * blk:(i + 1) * blk], 0,
+                                  scale=scale, kv_chunk=ctx.attn_chunk)
+            outs.append(oi)
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        out = online_attention(qg, k, v, q_pos, 0,
+                               scale=scale, kv_chunk=ctx.attn_chunk)
+    return out.reshape(B, S, H, Dh if v.shape[-1] == Dh else v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+def gqa_apply(x, p, cfg, ctx, mode, cache=None, index=None):
+    """x: (B,S,D) normed.  Returns (out, new_cache|None)."""
+    B, S, D = x.shape
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+
+    if mode == "decode":
+        pos = jnp.full((1,), index)
+    else:
+        pos = jnp.arange(S)
+    if cfg.positional == "rope":
+        cos, sin = rope_tables(pos, Dh, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    scale = Dh ** -0.5
+    if mode in ("train", "prefill"):
+        q = ctx.cs(q, ctx.batch, ctx.seq, None, None)
+        k = ctx.cs(k, ctx.batch, None, None, None)   # gathered context
+        v = ctx.cs(v, ctx.batch, None, None, None)
+        o = causal_attention(q, k, v, ctx, scale=scale)
+        new_cache = {"k": k, "v": v} if mode == "prefill" else None
+    else:
+        ck, cv = cache["k"], cache["v"]
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), index, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), index, 1)
+        if ctx.decode_tp:
+            dims = (ctx.batch, None, None, ("model",))
+        else:
+            dims = (ctx.batch, ("model",), None, None)
+        ck = ctx.cs(ck, *dims)
+        cv = ctx.cs(cv, *dims)
+        Smax = ck.shape[1]
+        qg = q.reshape(B, 1, KV, H // KV, Dh).astype(jnp.float32)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, ck.astype(jnp.float32)) * scale
+        mask = jnp.arange(Smax) <= index
+        s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", w, cv.astype(jnp.float32))
+        o = o.reshape(B, 1, H, Dh)
+        new_cache = {"k": ck, "v": cv}
+    out = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["wo"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-style multi-head latent attention)
+# ---------------------------------------------------------------------------
+def _mla_q(x, p, cfg):
+    if cfg.q_lora_rank:
+        from repro.models.layers import rms_norm
+        cq = rms_norm(x @ p["w_dq"], p["q_ln"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"])
+    return q  # (B,S,H, nope+rope)
+
+
+def mla_apply(x, p, cfg, ctx, mode, cache=None, index=None):
+    from repro.models.layers import rms_norm
+    B, S, D = x.shape
+    H = cfg.num_heads
+    nope, rope_d, vd, r = (cfg.qk_nope_dim, cfg.qk_rope_dim,
+                           cfg.v_head_dim, cfg.kv_lora_rank)
+    scale = (nope + rope_d) ** -0.5
+
+    q = _mla_q(x, p, cfg)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    ckv = rms_norm(x @ p["w_dkv"], p["kv_ln"], cfg.norm_eps)      # (B,S,r)
+    k_rope = (x @ p["w_kr"])[:, :, None, :]                       # (B,S,1,rope)
+
+    pos = jnp.full((1,), index) if mode == "decode" else jnp.arange(S)
+    cos, sin = rope_tables(pos, rope_d, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+
+    if mode in ("train", "prefill"):
+        # Naive path: materialise per-head K/V (compute-friendly at long S).
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uk"])
+        v = jnp.einsum("bsr,rhv->bshv", ckv, p["w_uv"])
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(
+            k_rope, (B, S, H, rope_d)).astype(k_nope.dtype)], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope.astype(q_nope.dtype)], axis=-1)
+        qq = ctx.cs(qq, ctx.batch, ctx.seq, None, None)
+        k = ctx.cs(k, ctx.batch, None, None, None)
+        v = ctx.cs(v, ctx.batch, None, None, None)
+        o = causal_attention(qq, k, v, ctx, scale=scale)          # (B,S,H,vd)
+        new_cache = ({"ckv": ckv, "kr": k_rope[:, :, 0, :]}
+                     if mode == "prefill" else None)
+    else:
+        # Absorbed decode: attend in the compressed latent space; the cache
+        # holds (ckv, k_rope) only — (r + rope_d) per token instead of
+        # H·(nope+rope+vd).  TPU-native adaptation of MLA serving.
+        cc, ckr = cache["ckv"], cache["kr"]
+        cc = jax.lax.dynamic_update_slice_in_dim(
+            cc, ckv.astype(cc.dtype), index, 1)
+        ckr = jax.lax.dynamic_update_slice_in_dim(
+            ckr, k_rope[:, :, 0, :].astype(ckr.dtype), index, 1)
+        cc = ctx.cs(cc, ctx.batch, ("model",), None)
+        ckr = ctx.cs(ckr, ctx.batch, ("model",), None)
+        Smax = cc.shape[1]
+        q_abs = jnp.einsum("bthn,rhn->bthr", q_nope.astype(jnp.float32),
+                           p["w_uk"].astype(jnp.float32))         # (B,1,H,r)
+        s = (jnp.einsum("bthr,bsr->bhts", q_abs, cc.astype(jnp.float32))
+             + jnp.einsum("bthp,bsp->bhts", q_rope.astype(jnp.float32),
+                          ckr.astype(jnp.float32))) * scale
+        mask = jnp.arange(Smax) <= index
+        s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhts,bsr->bthr", w, cc.astype(jnp.float32))
+        o = jnp.einsum("bthr,rhv->bthv", o_lat,
+                       p["w_uv"].astype(jnp.float32))             # (B,1,H,vd)
+        new_cache = {"ckv": cc, "kr": ckr}
+    out = jnp.einsum("bshv,hvd->bsd", o.astype(x.dtype), p["wo"])
+    return out, new_cache

@@ -1,0 +1,87 @@
+"""Shared building blocks: norms, rotary/sinusoidal positions, SwiGLU MLP,
+LM loss.  All computations that affect numerics (norm variance, softmax,
+logsumexp, recurrent states) run in float32 regardless of the activation
+dtype."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, w, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+def rope_tables(positions, head_dim: int, theta: float):
+    """positions: int array (...,) -> cos/sin tables (..., head_dim//2)."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (np.arange(0, half) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, Dh); cos/sin: (S, Dh/2) or (B, S, Dh/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:        # (S, half) -> (1, S, 1, half)
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:                    # (B, S, half) -> (B, S, 1, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    xf = x.astype(jnp.float32)
+    x1f, x2f = xf[..., :half], xf[..., half:]
+    out = jnp.concatenate([x1f * cos - x2f * sin, x1f * sin + x2f * cos], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(positions, d_model: int):
+    """positions: int array (S,) or (B, S) -> (..., d_model) f32 table."""
+    half = d_model // 2
+    freq = np.exp(-np.log(10000.0) * np.arange(half) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def mlp(x, p, ctx):
+    h = silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = ctx.cs(h, ctx.batch, ctx.seq, None)
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# LM loss (vocab possibly padded; computed in f32)
+# ---------------------------------------------------------------------------
+def lm_loss(h, w_head, labels, mask, vocab_size: int):
+    """h: (B, S, D), w_head: (D, Vp), labels: (B, S) int, mask: (B, S).
+
+    Returns mean NLL over masked-in tokens.  Padded vocab columns are
+    excluded via a large negative bias.
+    """
+    logits = jnp.einsum("bsd,dv->bsv", h, w_head,
+                        preferred_element_type=jnp.float32)
+    vp = w_head.shape[-1]
+    if vp > vocab_size:
+        pad_bias = jnp.where(jnp.arange(vp) < vocab_size, 0.0, -1e9)
+        logits = logits + pad_bias
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,108 @@
+"""Mamba (S6 selective state space) mixer.
+
+Train/prefill uses `jax.lax.associative_scan` over the sequence (log-depth,
+shardable); decode is the O(1) recurrent update.  States are float32.
+Causal depthwise conv is expressed as dc static shifts (halo exchanges under
+sequence sharding are inserted by XLA).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import silu
+
+
+def _causal_conv(xi, w, b):
+    """xi: (B,S,di); w: (dc, di); returns (B,S,di)."""
+    dc = w.shape[0]
+    S = xi.shape[1]
+    xp = jnp.pad(xi, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = sum(xp[:, j:j + S] * w[j] for j in range(dc))
+    return out + b
+
+
+def _ssm_params(h, p, cfg):
+    """h: (B,S,di) post-conv.  Returns dt (B,S,di), B/C (B,S,ds), A (di,ds)."""
+    ds, dtr = cfg.mamba_d_state, cfg.resolved_dt_rank
+    dbc = h @ p["w_x"]
+    dt_low = dbc[..., :dtr]
+    Bm = dbc[..., dtr:dtr + ds].astype(jnp.float32)
+    Cm = dbc[..., dtr + ds:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_low @ p["w_dt"] + p["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    return dt, Bm, Cm, A
+
+
+def _comb(a, b):
+    a1, b1 = a
+    a2, b2 = b
+    return a2 * a1, a2 * b1 + b2
+
+
+def _blocked_scan(dA, dBx, ctx, nblocks: int = 16):
+    """Two-level (Blelchoch-style) associative scan over the sequence.
+
+    A single global `associative_scan` over S builds log(S) tree levels whose
+    shrinking sequence dims fall below the shard size and REPLICATE —
+    observed 343 GiB/device on jamba train_4k.  Splitting into
+    sequence-sharding-aligned blocks keeps every big tree level sharded on
+    the block dim (block-local scans), with only tiny (B, nb, di, ds) block
+    aggregates scanned across blocks.  See EXPERIMENTS.md §Perf iteration B.
+    """
+    B, S, di, ds = dA.shape
+    if S % nblocks or S < 2 * nblocks:
+        nblocks = 1
+    Sl = S // nblocks
+    a = dA.reshape(B, nblocks, Sl, di, ds)
+    b = dBx.reshape(B, nblocks, Sl, di, ds)
+    a = ctx.cs(a, ctx.batch, ctx.seq, None, None, None)
+    b = ctx.cs(b, ctx.batch, ctx.seq, None, None, None)
+    aa, bb = jax.lax.associative_scan(_comb, (a, b), axis=2)  # block-local
+    agg_a, agg_b = aa[:, :, -1], bb[:, :, -1]                 # (B, nb, di, ds)
+    pa, pb = jax.lax.associative_scan(_comb, (agg_a, agg_b), axis=1)
+    # exclusive prefix state entering each block
+    init = jnp.concatenate(
+        [jnp.zeros_like(pb[:, :1]), pb[:, :-1]], axis=1)      # (B, nb, di, ds)
+    states = aa * init[:, :, None] + bb
+    states = ctx.cs(states, ctx.batch, ctx.seq, None, None, None)
+    return states.reshape(B, S, di, ds)
+
+
+def mamba_apply(x, p, cfg, ctx, mode, cache=None, index=None):
+    B, S, D = x.shape
+    di, dc = cfg.mamba_d_inner, cfg.mamba_d_conv
+    xz = x @ p["w_in"]
+    xi, z = xz[..., :di], xz[..., di:]
+
+    if mode == "decode":
+        window = jnp.concatenate(
+            [cache["conv"], xi.astype(cache["conv"].dtype)], axis=1)  # (B,dc,di)
+        conv = jnp.einsum("bcd,cd->bd", window, p["conv_w"])[:, None] + p["conv_b"]
+        new_conv = window[:, 1:]
+        h = silu(conv).astype(x.dtype)                               # (B,1,di)
+        dt, Bm, Cm, A = _ssm_params(h, p, cfg)
+        dA = jnp.exp(dt[:, 0, :, None] * A)                          # (B,di,ds)
+        dBx = (dt[:, 0, :, None] * Bm[:, 0, None, :]
+               * h.astype(jnp.float32)[:, 0, :, None])
+        s = dA * cache["ssm"] + dBx
+        y = jnp.einsum("bds,bs->bd", s, Cm[:, 0])[:, None]           # (B,1,di)
+        new_cache = {"conv": new_conv, "ssm": s}
+    else:
+        conv = _causal_conv(xi, p["conv_w"], p["conv_b"])
+        h = silu(conv)
+        dt, Bm, Cm, A = _ssm_params(h, p, cfg)
+        dA = jnp.exp(dt[..., None] * A)                              # (B,S,di,ds)
+        dBx = dt[..., None] * Bm[:, :, None, :] * h.astype(jnp.float32)[..., None]
+        states = _blocked_scan(dA, dBx, ctx)
+        y = jnp.einsum("bsdn,bsn->bsd", states, Cm)
+        if mode == "prefill":
+            new_conv = xi[:, S - (dc - 1):].astype(jnp.float32) if S >= dc - 1 \
+                else jnp.pad(xi, ((0, 0), (dc - 1 - S, 0), (0, 0))).astype(jnp.float32)
+            new_cache = {"conv": new_conv, "ssm": states[:, -1]}
+        else:
+            new_cache = None
+    y = y + p["D"].astype(jnp.float32) * h.astype(jnp.float32)
+    y = y.astype(x.dtype) * silu(z)
+    return y @ p["w_out"], new_cache

@@ -1,0 +1,87 @@
+"""Logical-axis sharding context threaded through model code.
+
+Models never name mesh axes directly; they call ``ctx.cs(x, dim0, dim1, ...)``
+where each dim is ``None`` (unsharded) or a tuple of mesh axis names.  The
+context is built per phase (train / prefill / decode) by
+``repro.launch.sharding``; the default (no mesh) context is a no-op so the
+same model code runs single-device in tests.
+
+Scheme (see DESIGN.md §4):
+  train/prefill : batch over ('data',) [+('pod','data') multi-pod batch],
+                  sequence over ('model',) [train CP adds 'pod'],
+                  params FSDP (storage-sharded, gathered at use by XLA).
+  decode        : batch over ('data',) [('pod','data')], KV-cache sequence
+                  over ('model',) -> flash-decode style partial softmax with
+                  XLA-inserted all-reduces.  ``decode_tp`` switches weights to
+                  contraction-dim sharding (head_dim over 'model').
+  MoE           : expert-parallel shard_map with explicit all_to_all when
+                  ``ep=True`` (mesh present), dense fallback otherwise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Optional[Tuple[str, ...]]
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def best_axes(mesh: Mesh, size: int, axes):
+    """Longest prefix of ``axes`` whose total size divides ``size``; None if
+    none does."""
+    if not axes:
+        return None
+    for end in range(len(axes), 0, -1):
+        cand = tuple(axes[:end])
+        if size % _axis_size(mesh, cand) == 0:
+            return cand if len(cand) > 1 else cand[0]
+    return None
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisCtx:
+    mesh: Optional[Mesh] = None
+    phase: str = "train"              # train | prefill | decode
+    batch: Axes = None                # mesh axes for the batch dim
+    seq: Axes = None                  # mesh axes for the sequence dim
+    ep: bool = False                  # shard_map expert parallelism
+    ep_axis: str = "model"
+    fsdp_axis: str = "data"           # expert-weight d gather axis inside EP
+    decode_tp: bool = False           # decode: shard head_dim over 'model'
+    attn_schedule: str = "rect"       # rect | triangle (see attention.py)
+    attn_chunk: int = 1024            # kv chunk for online-softmax scan
+    seq_shard_states: bool = True     # shard recurrent states / caches
+
+    def cs(self, x, *dims):
+        """with_sharding_constraint by logical dims.  For each dim the longest
+        prefix of its axis tuple that divides the size is used (e.g. batch=1
+        in long_500k falls back to unsharded)."""
+        if self.mesh is None:
+            return x
+        spec = [best_axes(self.mesh, size, axes)
+                for size, axes in zip(x.shape, dims)]
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def hidden(self, x):
+        """(B, S, D) residual-stream constraint."""
+        return self.cs(x, self.batch, self.seq, None)
+
+    @property
+    def seq_size(self) -> int:
+        if self.mesh is None or not self.seq:
+            return 1
+        return _axis_size(self.mesh, self.seq)
+
+
+NULL_CTX = AxisCtx()

@@ -1,0 +1,76 @@
+"""Layer assembly: mixer+FFN blocks, prefix layers, and the scanned unit
+stack.  Parameters of the scanned units carry a leading ``num_units`` dim so
+the HLO contains a single unit regardless of depth."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import gqa_apply, mla_apply
+from repro.models.layers import mlp, rms_norm
+from repro.models.mamba import mamba_apply
+from repro.models.moe import moe_apply
+from repro.models.xlstm import mlstm_apply, slstm_apply
+
+MIXERS = {
+    "attn": gqa_apply,
+    "mla": mla_apply,
+    "mamba": mamba_apply,
+    "mlstm": mlstm_apply,
+    "slstm": slstm_apply,
+}
+
+
+def layer_apply(x, lp, mixer, ffn, cfg, ctx, mode, cache=None, index=None):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    mix_out, new_cache = MIXERS[mixer](h, lp, cfg, ctx, mode,
+                                       cache=cache, index=index)
+    x = ctx.hidden(x + mix_out)
+    if ffn != "none":
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y = mlp(h2, lp, ctx) if ffn == "mlp" else moe_apply(h2, lp, cfg, ctx)
+        x = ctx.hidden(x + y)
+    return x, new_cache
+
+
+def unit_apply(x, unit_params, cfg, ctx, mode, unit_caches=None, index=None):
+    new_caches = {}
+    for i, (mixer, ffn) in enumerate(cfg.unit_pattern):
+        key = f"l{i}"
+        cache_i = unit_caches[key] if unit_caches is not None else None
+        x, nc = layer_apply(x, unit_params[key], mixer, ffn, cfg, ctx, mode,
+                            cache=cache_i, index=index)
+        new_caches[key] = nc
+    return x, new_caches
+
+
+def stack_apply(x, params, cfg, ctx, mode, caches=None, index=None):
+    """Returns (x, new_caches).  ``caches`` required for decode; produced by
+    prefill; None (and returned None) for train."""
+    new_prefix = []
+    for i, (mixer, ffn) in enumerate(cfg.prefix_pattern):
+        cache_i = caches["prefix"][i] if caches is not None else None
+        x, nc = layer_apply(x, params["prefix"][f"l{i}"], mixer, ffn, cfg,
+                            ctx, mode, cache=cache_i, index=index)
+        new_prefix.append(nc)
+
+    def body(carry, xs):
+        h = carry
+        if mode == "decode":
+            up, ucache = xs
+        else:
+            up, ucache = xs, None
+        h, ncache = unit_apply(h, up, cfg, ctx, mode, ucache, index)
+        return h, ncache
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(body)
+
+    xs = (params["units"], caches["units"]) if mode == "decode" \
+        else params["units"]
+    x, unit_caches = jax.lax.scan(body, x, xs)
+
+    if mode == "train":
+        return x, None
+    return x, {"prefix": tuple(new_prefix), "units": unit_caches}

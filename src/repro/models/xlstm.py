@@ -1,0 +1,189 @@
+"""xLSTM mixers: mLSTM (matrix memory, parallel/quadratic form for
+train+prefill, O(1) recurrent decode) and sLSTM (scalar memory with
+exponential gating — strictly sequential `lax.scan`, the reason xLSTM keeps
+its sLSTM count low).
+
+mLSTM parallel form follows the stabilised formulation of the xLSTM paper:
+  D̃_ij = a_i − a_j + log ĩ_j   (j ≤ i),  a = cumsum(logsigmoid(f̃))
+  h_i   = Σ_j (qᵀk/√d)·exp(D̃_ij − m_i) v_j / max(|den_i|, exp(−m_i))
+computed with an online (chunked) max/accumulate scan so memory stays
+O(S·chunk).  The recurrent decode step is exactly consistent with it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import silu
+
+NEG = -1e30
+
+
+def _qkv(x, p, H, dh):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"]).astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["w_k"]).astype(jnp.float32) * dh ** -0.5
+    v = jnp.einsum("bsd,dhk->bshk", x, p["w_v"]).astype(jnp.float32)
+    logi = (x @ p["w_i"]).astype(jnp.float32)                 # (B,S,H)
+    logf = jax.nn.log_sigmoid((x @ p["w_f"]).astype(jnp.float32))
+    return q, k, v, logi, logf
+
+
+def _mlstm_parallel(q, k, v, logi, logf, chunk, ctx=None):
+    """Chunked online accumulation of the stabilised quadratic form.
+
+    Attention-like sharding: the q-side (output rows) shards over the
+    sequence axis; k/v/gates are gathered — same pattern as
+    attention.online_attention, so per-chip score-class buffers are
+    (B, S/model, H, chunk) instead of (B, S, H, chunk).  See EXPERIMENTS.md
+    §Perf iteration A."""
+    B, S, H, dh = q.shape
+    a = jnp.cumsum(logf, axis=1)                              # (B,S,H)
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S
+    nc = S // chunk
+    kc = jnp.moveaxis(k.reshape(B, nc, chunk, H, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nc, chunk, H, dh), 1, 0)
+    ac = jnp.moveaxis(a.reshape(B, nc, chunk, H), 1, 0)
+    ic = jnp.moveaxis(logi.reshape(B, nc, chunk, H), 1, 0)
+    pos = jnp.arange(nc) * chunk
+    q_pos = jnp.arange(S)
+
+    def body(carry, xs):
+        m, l, acc = carry                                     # (B,S,H)/( ,dh)
+        k_i, v_i, a_i, i_i, p0 = xs
+        # log-gate matrix for this kv chunk: (B, S, H, chunk)
+        logD = (a[:, :, None, :] - a_i[:, None, :, :]
+                + i_i[:, None, :, :]).transpose(0, 1, 3, 2)
+        mask = q_pos[:, None] >= (p0 + jnp.arange(chunk))[None, :]
+        logD = jnp.where(mask[None, :, None, :], logD, NEG)
+        m_new = jnp.maximum(m, jnp.max(logD, axis=-1))
+        gate = jnp.exp(logD - m_new[..., None])
+        qk = jnp.einsum("bqhd,bchd->bqhc", q, k_i)
+        s = qk * gate
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(s, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bqhc,bchd->bqhd", s, v_i)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, H), NEG, jnp.float32)
+    l0 = jnp.zeros((B, S, H), jnp.float32)
+    a0 = jnp.zeros((B, S, H, dh), jnp.float32)
+    if ctx is not None:
+        m0 = ctx.cs(m0, ctx.batch, ctx.seq, None)
+        l0 = ctx.cs(l0, ctx.batch, ctx.seq, None)
+        a0 = ctx.cs(a0, ctx.batch, ctx.seq, None, None)
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, ac, ic, pos))
+    den = jnp.maximum(jnp.abs(l), jnp.exp(-m)) + 1e-12
+    return acc / den[..., None], a, m
+
+
+def _mlstm_final_state(k, v, logi, a, m_last):
+    """State (C, n, m) equivalent to having run the recurrence to step S."""
+    a_last = a[:, -1:, :]                                     # (B,1,H)
+    w = jnp.exp(a_last - a + logi - m_last[:, None, :])       # (B,S,H)
+    C = jnp.einsum("bsh,bshk,bshv->bhkv", w, k, v)
+    n = jnp.einsum("bsh,bshk->bhk", w, k)
+    return C, n
+
+
+def mlstm_apply(x, p, cfg, ctx, mode, cache=None, index=None):
+    B, S, D = x.shape
+    H = cfg.xlstm_num_heads
+    dh = D // H
+    q, k, v, logi, logf = _qkv(x, p, H, dh)
+
+    if mode == "decode":
+        C, n, m = cache["C"], cache["n"], cache["m"]          # f32
+        lf, li = logf[:, 0], logi[:, 0]                       # (B,H)
+        m_new = jnp.maximum(lf + m, li)
+        f_ = jnp.exp(lf + m - m_new)[..., None]
+        i_ = jnp.exp(li - m_new)[..., None]
+        C = f_[..., None] * C + i_[..., None] * jnp.einsum(
+            "bhk,bhv->bhkv", k[:, 0], v[:, 0])
+        n = f_ * n + i_ * k[:, 0]
+        num = jnp.einsum("bhk,bhkv->bhv", q[:, 0], C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q[:, 0], n)),
+                          jnp.exp(-m_new))[..., None] + 1e-12
+        h = (num / den)[:, None]                              # (B,1,H,dh)
+        new_cache = {"C": C, "n": n, "m": m_new}
+    else:
+        q = ctx.cs(q, ctx.batch, ctx.seq, None, None)
+        k = ctx.cs(k, ctx.batch, None, None, None)     # gathered context
+        v = ctx.cs(v, ctx.batch, None, None, None)
+        logi = ctx.cs(logi, ctx.batch, None, None)
+        logf = ctx.cs(logf, ctx.batch, None, None)
+        h, a, m = _mlstm_parallel(q, k, v, logi, logf, ctx.attn_chunk,
+                                  ctx=ctx)
+        if mode == "prefill":
+            m_last = m[:, -1, :]
+            C, n = _mlstm_final_state(k, v, logi, a, m_last)
+            new_cache = {"C": C, "n": n, "m": m_last}
+        else:
+            new_cache = None
+
+    merged = h.reshape(B, -1, D).astype(x.dtype)
+    og = jax.nn.sigmoid(x @ p["w_og"])
+    return (og * merged) @ p["w_down"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def _slstm_step(p, carry, gates):
+    c, n, h, m = carry                                        # (B,H,dh) f32
+    z_in, i_in, f_in, o_in = gates
+    z_t = jnp.tanh(z_in + jnp.einsum("bhd,hde->bhe", h, p["r_z"]))
+    i_t = i_in + jnp.einsum("bhd,hde->bhe", h, p["r_i"])
+    f_t = f_in + jnp.einsum("bhd,hde->bhe", h, p["r_f"])
+    o_t = jax.nn.sigmoid(o_in + jnp.einsum("bhd,hde->bhe", h, p["r_o"]))
+    m_new = jnp.maximum(f_t + m, i_t)
+    i_ = jnp.exp(i_t - m_new)
+    f_ = jnp.exp(f_t + m - m_new)
+    c_new = f_ * c + i_ * z_t
+    n_new = f_ * n + i_
+    h_new = o_t * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_apply(x, p, cfg, ctx, mode, cache=None, index=None):
+    B, S, D = x.shape
+    H = cfg.xlstm_num_heads
+    dh = D // H
+    if mode != "decode":
+        # strictly sequential over S: gather the sequence (compute is
+        # replicated across the model axis; the residual re-shards after)
+        x = ctx.cs(x, ctx.batch, None, None)
+    gz = jnp.einsum("bsd,dhk->bshk", x, p["w_z"]).astype(jnp.float32)
+    gi = jnp.einsum("bsd,dhk->bshk", x, p["w_i"]).astype(jnp.float32)
+    gf = jnp.einsum("bsd,dhk->bshk", x, p["w_f"]).astype(jnp.float32)
+    go = jnp.einsum("bsd,dhk->bshk", x, p["w_o"]).astype(jnp.float32)
+
+    if mode == "decode":
+        carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+        carry = _slstm_step(p, carry, (gz[:, 0], gi[:, 0], gf[:, 0], go[:, 0]))
+        c, n, h, m = carry
+        out = h[:, None]                                      # (B,1,H,dh)
+        new_cache = {"c": c, "n": n, "h": h, "m": m}
+    else:
+        z0 = jnp.zeros((B, H, dh), jnp.float32)
+        carry0 = (z0, z0, z0, jnp.full((B, H, dh), 0.0, jnp.float32))
+
+        def body(carry, g):
+            new = _slstm_step(p, carry, g)
+            return new, new[2]
+
+        gates = tuple(jnp.moveaxis(g, 1, 0) for g in (gz, gi, gf, go))
+        carry, hs = jax.lax.scan(body, carry0, gates)
+        out = jnp.moveaxis(hs, 0, 1)                          # (B,S,H,dh)
+        if mode == "prefill":
+            c, n, h, m = carry
+            new_cache = {"c": c, "n": n, "h": h, "m": m}
+        else:
+            new_cache = None
+
+    merged = out.reshape(B, -1, D).astype(x.dtype)
+    return merged, new_cache

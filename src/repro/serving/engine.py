@@ -1,0 +1,320 @@
+"""Serving engine: continuous batching with chunked prefill, driven by a
+pluggable scheduler (Tempo or baselines) against a pluggable backend.
+
+``SimBackend`` — roofline-derived step-time model of a TPU v5e serving
+replica (197 TFLOP/s, 819 GB/s HBM per chip): prefill time is compute-bound,
+decode time is weight+KV HBM-bound.  This is what reproduces the paper's
+figures at laptop scale.
+
+``JaxBackend`` (jax_backend.py) — a real tiny model decoding on CPU, proving
+the scheduler integrates with actual JAX execution.
+
+The engine owns request lifecycle, KV block accounting (paged, 128-token
+pages), collective-DAG stage spawning, and SLO-tracker updates.  Time is the
+sum of backend step times plus arrival gaps — a discrete-event loop at
+engine-step granularity, faithful to iteration-level scheduling."""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.scheduler import EngineView, SchedulerBase
+from repro.serving.kvcache import BlockManager
+from repro.serving.request import (CollectiveDag, ReqState, Request)
+from repro.serving.workload import WorkloadGen
+
+
+# ---------------------------------------------------------------------------
+class SimBackend:
+    """Step-time model: t = overhead + prefill_compute + decode_hbm."""
+
+    def __init__(self, n_params: float = 8e9, kv_bytes_per_token: float = 131072,
+                 chips: int = 8, peak_flops: float = 197e12,
+                 hbm_bw: float = 819e9, mfu: float = 0.45,
+                 overhead: float = 0.004):
+        self.n_params = n_params
+        self.kv_bytes = kv_bytes_per_token
+        self.chips = chips
+        self.flops = peak_flops * chips * mfu
+        self.bw = hbm_bw * chips * 0.7
+        self.overhead = overhead
+
+    def step_time(self, prefill_tokens: int, decode_ctxs: List[int]) -> float:
+        t = self.overhead
+        if prefill_tokens:
+            t += 2.0 * self.n_params * prefill_tokens / self.flops
+        if decode_ctxs:
+            weights = 2.0 * self.n_params / self.bw
+            kv = sum(decode_ctxs) * self.kv_bytes / self.bw
+            t += weights + kv
+        return t
+
+    @classmethod
+    def for_model(cls, name: str = "llama-8b", **kw):
+        presets = {
+            "llama-8b": dict(n_params=8e9, kv_bytes_per_token=131072, chips=8),
+            "qwen-14b": dict(n_params=14e9, kv_bytes_per_token=196608,
+                             chips=8),
+            "llama-70b": dict(n_params=70e9, kv_bytes_per_token=327680,
+                              chips=32),
+        }
+        d = presets[name]
+        d.update(kw)
+        return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 64
+    prefill_budget: int = 2048        # tokens per step (chunked prefill)
+    kv_blocks: int = 8192             # × 128 tokens ≈ 1M tokens of KV
+    swap_bw: float = 60e9
+    max_steps: int = 2_000_000
+    fail_at: Optional[float] = None   # fault-tolerance drill (serve.py)
+
+
+class ServeEngine:
+    def __init__(self, backend, scheduler: SchedulerBase,
+                 config: EngineConfig = EngineConfig(),
+                 workload: Optional[WorkloadGen] = None):
+        self.backend = backend
+        self.sched = scheduler
+        self.cfg = config
+        self.workload = workload
+        self.kv = BlockManager(config.kv_blocks,
+                               kv_bytes_per_token=getattr(
+                                   backend, "kv_bytes", 131072))
+        self.requests: Dict[int, Request] = {}
+        self.dags: Dict[int, CollectiveDag] = {}
+        self.finished: List[Request] = []
+        self.now = 0.0
+        self.step = 0
+        self.step_log: List[Tuple[float, int, int]] = []
+        self.preempt_count = 0
+        self.swap_bytes = 0.0
+
+    # ------------------------------------------------------------------
+    def load(self, singles: List[Request],
+             dags: List[Tuple[CollectiveDag, List[Request]]]):
+        self._pending: List[Tuple[float, int, object]] = []
+        n = 0
+        for r in singles:
+            heapq.heappush(self._pending, (r.arrival, n := n + 1, ("r", r)))
+        for dag, reqs in dags:
+            heapq.heappush(self._pending,
+                           (dag.arrival, n := n + 1, ("dag", (dag, reqs))))
+
+    # ------------------------------------------------------------------
+    def _tracker(self):
+        return getattr(self.sched, "tracker", None)
+
+    def _admit(self, req: Request):
+        self.requests[req.rid] = req
+        view = self._view()
+        self.sched.on_arrival(req, view)
+
+    def _view(self) -> EngineView:
+        return EngineView(
+            now=self.now, step=self.step, requests=self.requests,
+            max_batch=self.cfg.max_batch,
+            prefill_budget=self.cfg.prefill_budget,
+            kv_block_bytes=int(self.kv.kv_bytes_per_token * 128),
+            swap_bw=self.cfg.swap_bw,
+            kv_free_frac=len(self.kv.free) / max(self.kv.num_blocks, 1),
+            dag_remaining=self._dag_remaining)
+
+    def _dag_remaining(self, rid: int) -> float:
+        """Max estimated remaining time across the request's stage siblings
+        (finishing one early doesn't finish the stage)."""
+        r = self.requests.get(rid)
+        tr = self._tracker()
+        if r is None or r.dag_id is None or tr is None:
+            return 0.0
+        best = 0.0
+        for sib in self.requests.values():
+            if sib.dag_id == r.dag_id and sib.stage == r.stage \
+                    and sib.state != ReqState.FINISHED:
+                ub = sib.pred_upper or sib.true_output_len
+                best = max(best, tr.est_remaining_time(sib, ub))
+        return best
+
+    # ------------------------------------------------------------------
+    def run(self, until: Optional[float] = None, drain: bool = True):
+        live = lambda: any(r.state != ReqState.FINISHED
+                           for r in self.requests.values())
+        while self.step < self.cfg.max_steps:
+            # admit everything that has arrived
+            while self._pending and self._pending[0][0] <= self.now:
+                _, _, (kind, obj) = heapq.heappop(self._pending)
+                if kind == "r":
+                    self._admit(obj)
+                else:
+                    dag, reqs = obj
+                    self.dags[dag.dag_id] = dag
+                    self._on_stage_start(dag, reqs, stage=0)
+            if not live():
+                if self._pending and (until is None
+                                      or self._pending[0][0] < until):
+                    self.now = max(self.now, self._pending[0][0])
+                    continue
+                break
+            if until is not None and self.now >= until and not drain:
+                break
+
+            view = self._view()
+            dec = self.sched.schedule(view)
+            self._execute(dec)
+
+        return self.finished
+
+    # ------------------------------------------------------------------
+    def _on_stage_start(self, dag: CollectiveDag, reqs: List[Request],
+                        stage: int):
+        total_in = sum(r.prompt_len for r in reqs)
+        hook = getattr(self.sched, "dag_tracker", None)
+        if hook is not None:
+            hook.on_stage_start(dag.dag_id, dag.app, self.now,
+                                len(reqs), total_in)
+        # stage deadline budgeting (Tempo); others keep the e2e deadline
+        deadline = None
+        if hook is not None and getattr(self.sched, "use_graph", False):
+            partial = hook.partials.get(dag.dag_id)
+            if partial is not None:
+                deadline, _ = self.sched.matcher.stage_budget(
+                    partial, self.now, dag.deadline, self.now - dag.arrival)
+        if getattr(self.sched, "precise", False):
+            # oracle: even split over the TRUE remaining stage count
+            rem = len(dag.stage_sizes) - stage
+            deadline = self.now + max(dag.deadline - self.now, 1e-3) / max(
+                rem, 1)
+        for r in reqs:
+            if deadline is not None:
+                r.stage_deadline = deadline
+            self._admit(r)
+        dag.cur_stage = stage
+
+    def _maybe_advance_dag(self, req: Request):
+        dag = self.dags.get(req.dag_id)
+        if dag is None:
+            return
+        hook = getattr(self.sched, "dag_tracker", None)
+        if hook is not None:
+            hook.on_request_done(dag.dag_id, req.prompt_len,
+                                 req.true_output_len)
+        # stage finished?
+        stage_live = [r for r in self.requests.values()
+                      if r.dag_id == dag.dag_id and r.stage == dag.cur_stage
+                      and r.state != ReqState.FINISHED]
+        if stage_live:
+            return
+        if hook is not None:
+            hook.on_stage_end(dag.dag_id, self.now)
+        nxt = dag.cur_stage + 1
+        if nxt < len(dag.stage_sizes):
+            reqs = self.workload.spawn_stage(dag, nxt, self.now) \
+                if self.workload else []
+            if reqs:
+                self._on_stage_start(dag, reqs, stage=nxt)
+                return
+        dag.finished = True
+        dag.finish_t = self.now
+        if hook is not None:
+            hook.on_dag_done(dag.dag_id, self.now)
+
+    # ------------------------------------------------------------------
+    def _evict_for(self, tokens_needed: int, protect: set) -> bool:
+        """Swap out preempted/idle sequences' KV until `tokens_needed` fit.
+        Returns False if impossible.  Swap cost is charged to the step."""
+        victims = sorted(
+            (r for r in self.requests.values()
+             if r.rid in self.kv.seqs and r.rid not in protect
+             and r.state in (ReqState.PREEMPTED, ReqState.WAITING)),
+            key=lambda r: -(r.prompt_len + r.decoded))
+        for v in victims:
+            if self.kv.can_fit(tokens_needed):
+                return True
+            moved = self.kv.swap_out(v.rid)
+            self.swap_bytes += moved
+            self._step_swap += moved
+        return self.kv.can_fit(tokens_needed)
+
+    def _ensure_kv(self, rid: int, tokens: int, protect: set) -> bool:
+        r = self.requests[rid]
+        alloc = self.kv.seqs.get(rid)
+        if alloc is not None and alloc.swapped:
+            cost = self.kv.swap_in(rid)
+            if cost is None:
+                if not self._evict_for(alloc.tokens, protect):
+                    return False
+                cost = self.kv.swap_in(rid)
+            self._step_swap += cost or 0.0
+        if self.kv.ensure(rid, tokens):
+            return True
+        if not self._evict_for(tokens, protect):
+            return False
+        return self.kv.ensure(rid, tokens)
+
+    def _execute(self, dec):
+        self._step_swap = 0.0
+        # displaced requests: slot lost; KV stays resident until pressure
+        for rid in dec.preempted:
+            r = self.requests.get(rid)
+            if r and r.state in (ReqState.RUNNING, ReqState.PREFILL):
+                r.state = ReqState.PREEMPTED
+                r.preemptions += 1
+                self.preempt_count += 1
+
+        protect = set(dec.decode_ids) | set(dec.prefill)
+        prefill_tokens = 0
+        for rid, chunk in dec.prefill.items():
+            r = self.requests.get(rid)
+            if r is None or r.state == ReqState.FINISHED:
+                continue
+            if not self._ensure_kv(rid, r.prefilled + chunk, protect):
+                continue  # KV pressure: skip this chunk
+            r.prefilled = min(r.prompt_len, r.prefilled + chunk)
+            r.state = ReqState.PREFILL
+            prefill_tokens += chunk
+
+        decode_ctxs = []
+        decoded_reqs = []
+        for rid in dec.decode_ids:
+            r = self.requests.get(rid)
+            if r is None or r.state == ReqState.FINISHED or \
+                    r.prefill_remaining > 0 or r.done:
+                continue
+            ctx = r.prompt_len + r.decoded
+            if not self._ensure_kv(rid, ctx + 1, protect):
+                continue
+            r.state = ReqState.RUNNING
+            decode_ctxs.append(ctx)
+            decoded_reqs.append(r)
+
+        dt = self.backend.step_time(prefill_tokens, decode_ctxs)
+        dt += self._step_swap / self.cfg.swap_bw
+        self.now += dt
+        self.step += 1
+        self.step_log.append((self.now, prefill_tokens, len(decoded_reqs)))
+        tr = self._tracker()
+        if tr is not None:
+            tr.on_step(dt, prefill_tokens, len(decoded_reqs))
+
+        finished_now = []
+        for r in decoded_reqs:
+            r.decoded += 1
+            r.token_times.append(self.now)
+            if r.first_token_t is None:
+                r.first_token_t = self.now
+            if r.done:
+                r.state = ReqState.FINISHED
+                r.finish_t = self.now
+                self.kv.release(r.rid)
+                self.finished.append(r)
+                finished_now.append(r)
+        for r in finished_now:
+            self.sched.on_finish(r, self._view())
+            if r.dag_id is not None:
+                self._maybe_advance_dag(r)

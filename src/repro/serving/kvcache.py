@@ -1,0 +1,88 @@
+"""Paged KV-cache manager: block tables, allocation, preemption swap.
+
+TPU adaptation of PagedAttention bookkeeping: 128-token pages (lane-aligned;
+GPU vLLM uses 16).  The manager is used (a) by the serving engine to model
+KV memory pressure and preemption swap cost, and (b) by the JaxBackend /
+Pallas paged-attention kernel for real block tables."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+BLOCK_TOKENS = 128
+
+
+@dataclasses.dataclass
+class SeqAlloc:
+    blocks: List[int]
+    tokens: int = 0
+    swapped: bool = False
+
+
+class BlockManager:
+    def __init__(self, num_blocks: int, block_tokens: int = BLOCK_TOKENS,
+                 kv_bytes_per_token: float = 128e3):
+        self.num_blocks = num_blocks
+        self.block_tokens = block_tokens
+        self.kv_bytes_per_token = kv_bytes_per_token
+        self.free: List[int] = list(range(num_blocks))
+        self.seqs: Dict[int, SeqAlloc] = {}
+        self.swapped_tokens = 0
+        self.peak_used = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def used_blocks(self) -> int:
+        return self.num_blocks - len(self.free)
+
+    def free_tokens(self) -> int:
+        return len(self.free) * self.block_tokens
+
+    def can_fit(self, tokens: int) -> bool:
+        need = -(-tokens // self.block_tokens)
+        return need <= len(self.free)
+
+    # ------------------------------------------------------------------
+    def ensure(self, rid: int, tokens: int) -> bool:
+        """Grow rid's allocation to cover `tokens`; False if OOM."""
+        a = self.seqs.setdefault(rid, SeqAlloc(blocks=[]))
+        need = -(-tokens // self.block_tokens) - len(a.blocks)
+        if need > len(self.free):
+            return False
+        for _ in range(max(need, 0)):
+            a.blocks.append(self.free.pop())
+        a.tokens = max(a.tokens, tokens)
+        a.swapped = False
+        self.peak_used = max(self.peak_used, self.used_blocks)
+        return True
+
+    def release(self, rid: int):
+        a = self.seqs.pop(rid, None)
+        if a and not a.swapped:
+            self.free.extend(a.blocks)
+
+    # ------------------------------------------------------------------
+    def swap_out(self, rid: int) -> float:
+        """Preemption: move rid's blocks to host; returns bytes moved."""
+        a = self.seqs.get(rid)
+        if a is None or a.swapped:
+            return 0.0
+        self.free.extend(a.blocks)
+        a.blocks = []
+        a.swapped = True
+        self.swapped_tokens += a.tokens
+        return a.tokens * self.kv_bytes_per_token
+
+    def swap_in(self, rid: int) -> Optional[float]:
+        a = self.seqs.get(rid)
+        if a is None or not a.swapped:
+            return 0.0
+        if not self.ensure(rid, a.tokens):
+            return None
+        self.swapped_tokens -= a.tokens
+        return a.tokens * self.kv_bytes_per_token
+
+    def block_table(self, rid: int) -> List[int]:
+        a = self.seqs.get(rid)
+        return list(a.blocks) if a else []

@@ -1,0 +1,82 @@
+"""Metrics: service gain (total & timeline), SLO goodput, per-type latency
+percentiles, throughput — everything the paper's figures report."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.service import ServiceModel
+from repro.serving.request import Request
+
+
+def _pctl(xs: Sequence[float], p: float) -> float:
+    if not xs:
+        return float("nan")
+    return float(np.percentile(np.asarray(xs), p))
+
+
+@dataclasses.dataclass
+class Summary:
+    scheduler: str
+    n_finished: int
+    service_gain: float
+    max_gain: float
+    goodput_rps: float
+    goodput_frac: float
+    throughput_tok_s: float
+    makespan: float
+    per_type: Dict[str, Dict[str, float]]
+    gain_timeline: List[float]      # per-bucket service gain
+    preemptions: int = 0
+
+    def row(self) -> Dict[str, float]:
+        return dict(scheduler=self.scheduler, n=self.n_finished,
+                    service_gain=round(self.service_gain, 1),
+                    gain_frac=round(self.service_gain / max(self.max_gain, 1e-9), 4),
+                    goodput_rps=round(self.goodput_rps, 3),
+                    goodput_frac=round(self.goodput_frac, 4),
+                    tok_s=round(self.throughput_tok_s, 1),
+                    makespan=round(self.makespan, 1))
+
+
+def summarize(name: str, finished: List[Request], service: ServiceModel,
+              makespan: float, bucket: float = 60.0,
+              preemptions: int = 0) -> Summary:
+    gain = sum(service.realized_gain(r) for r in finished)
+    maxg = sum(service.max_gain(r) for r in finished)
+    met = [r for r in finished if service.slo_met(r)]
+    toks = sum(r.prompt_len + r.decoded for r in finished)
+    mk = max(makespan, 1e-9)
+
+    per_type: Dict[str, Dict[str, float]] = {}
+    for kind in ("latency", "throughput", "collective", "none"):
+        rs = [r for r in finished if r.slo.kind == kind]
+        if not rs:
+            continue
+        ttfts = [r.ttft() for r in rs if r.ttft() is not None]
+        tbts = [t for r in rs for t in r.tbts()]
+        ttlts = [r.ttlt() for r in rs if r.ttlt() is not None]
+        per_type[kind] = dict(
+            n=len(rs),
+            ttft_p50=_pctl(ttfts, 50), ttft_p95=_pctl(ttfts, 95),
+            tbt_p50=_pctl(tbts, 50), tbt_p95=_pctl(tbts, 95),
+            ttlt_p50=_pctl(ttlts, 50), ttlt_p95=_pctl(ttlts, 95),
+            slo_met=len([r for r in rs if service.slo_met(r)]) / len(rs),
+        )
+
+    nb = int(mk // bucket) + 1
+    timeline = [0.0] * nb
+    for r in finished:
+        if r.finish_t is not None:
+            timeline[min(int(r.finish_t // bucket), nb - 1)] += \
+                service.realized_gain(r)
+
+    return Summary(
+        scheduler=name, n_finished=len(finished), service_gain=gain,
+        max_gain=maxg, goodput_rps=len(met) / mk,
+        goodput_frac=len(met) / max(len(finished), 1),
+        throughput_tok_s=toks / mk, makespan=mk, per_type=per_type,
+        gain_timeline=timeline, preemptions=preemptions)

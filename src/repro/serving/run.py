@@ -1,0 +1,43 @@
+"""One-call experiment runner: workload × scheduler × backend -> Summary."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.baselines import make_scheduler
+from repro.core.service import ServiceModel
+from repro.serving.engine import EngineConfig, ServeEngine, SimBackend
+from repro.serving.metrics import Summary, summarize
+from repro.serving.workload import WorkloadGen, WorkloadSpec
+
+
+def run_experiment(scheduler: str = "tempo",
+                   spec: Optional[WorkloadSpec] = None,
+                   engine_cfg: Optional[EngineConfig] = None,
+                   backend: Optional[SimBackend] = None,
+                   service: Optional[ServiceModel] = None,
+                   warmup: int = 512,
+                   sched_kwargs: Optional[Dict] = None) -> Summary:
+    spec = spec or WorkloadSpec()
+    engine_cfg = engine_cfg or EngineConfig()
+    backend = backend or SimBackend.for_model("llama-8b")
+    service = service or ServiceModel()
+    sk = dict(sched_kwargs or {})
+    if scheduler.startswith("tempo") and scheduler != "tempo-sjf":
+        sk.setdefault("service", service)
+    sched = make_scheduler(scheduler, **sk)
+
+    gen = WorkloadGen(spec)
+    if warmup and getattr(sched, "needs_predictions", False):
+        pred = getattr(sched, "predictor", None)
+        if pred is not None:
+            pred.warm_start(gen.warmup_requests(warmup))
+
+    singles, dags = gen.generate()
+    eng = ServeEngine(backend, sched, engine_cfg, workload=gen)
+    eng.load(singles, dags)
+    finished = eng.run()
+    return summarize(sched.name if hasattr(sched, "name") else scheduler,
+                     finished, service, eng.now,
+                     preemptions=eng.preempt_count)

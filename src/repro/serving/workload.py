@@ -1,0 +1,212 @@
+"""Workload synthesis reproducing the paper's evaluation setup (§6.1).
+
+Length statistics follow Table 2 (Chatbot & LC workloads, single and
+collective), arrivals are Poisson (or BurstGPT-style bursty: gamma-modulated
+rate), request patterns mix 3:1:1 latency:throughput:collective by default,
+SLOs follow the paper (TTFT≈2s, TBT≈100ms, TTLT≈20s, collective 20s×stages)
+with per-user jitter.  Collective requests instantiate ToT-style trees
+(depth 2, 3 thoughts/step) and agentic chains whose stage counts are NOT
+revealed to the scheduler (evolving DAGs).
+
+Each request carries ``meta['hint']`` — a noisy function of the true output
+length standing in for whatever semantic signal a prompt encoder could
+extract.  The noise level is chosen so point prediction stays hard (fig. 2b)
+while upper bounds remain learnable (fig. 5b).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.request import CollectiveDag, Request, SLOSpec
+
+# Table 2: (mean, std, p50, p95) per (workload, single/collective, in/out)
+TABLE2 = {
+    ("chatbot", "single", "in"): (93, 244, 27, 391),
+    ("chatbot", "single", "out"): (318, 313, 225, 1024),
+    ("chatbot", "coll", "in"): (1300, 912, 1097, 2767),
+    ("chatbot", "coll", "out"): (4458, 1176, 4417, 6452),
+    ("lc", "single", "in"): (76, 100, 49, 229),
+    ("lc", "single", "out"): (482, 236, 422, 1024),
+    ("lc", "coll", "in"): (1064, 389, 983, 1713),
+    ("lc", "coll", "out"): (6744, 819, 6703, 8120),
+}
+
+
+def _lognormal_from(mean: float, p50: float, rng: np.random.Generator,
+                    n: int = 1) -> np.ndarray:
+    """Lognormal matching the (mean, median) pair: mu = ln p50,
+    sigma = sqrt(2 ln(mean/p50))."""
+    mu = math.log(max(p50, 1.0))
+    sigma = math.sqrt(max(2.0 * math.log(max(mean, 1.0) / max(p50, 1.0)),
+                          0.05))
+    return np.maximum(1, rng.lognormal(mu, sigma, n)).astype(int)
+
+
+@dataclasses.dataclass
+class WorkloadSpec:
+    dataset: str = "chatbot"          # chatbot | lc
+    rate: float = 2.0                 # requests/s (programs count as one)
+    duration: float = 600.0           # s of arrivals
+    mix: Tuple[float, float, float] = (3, 1, 1)   # latency:throughput:coll
+    best_effort_frac: float = 0.05    # extra non-SLO traffic
+    bursty: bool = False              # BurstGPT-style gamma-modulated rate
+    slo_scale: float = 1.0
+    slo_jitter: float = 0.3           # per-user SLO heterogeneity
+    hint_noise: float = 0.8
+    seed: int = 0
+
+
+class WorkloadGen:
+    def __init__(self, spec: WorkloadSpec):
+        self.spec = spec
+        self.rng = np.random.default_rng(spec.seed)
+        self._rid = 0
+        self._dag = 0
+
+    # ------------------------------------------------------------------
+    def _lens(self, coll: bool) -> Tuple[int, int]:
+        key = (self.spec.dataset, "coll" if coll else "single")
+        mi, _, p50i, _ = TABLE2[key + ("in",)] if False else TABLE2[
+            (key[0], key[1], "in")]
+        mo, _, p50o, _ = TABLE2[(key[0], key[1], "out")]
+        li = int(_lognormal_from(mi, p50i, self.rng)[0])
+        lo = int(_lognormal_from(mo, p50o, self.rng)[0])
+        return max(li, 4), max(lo, 8)
+
+    def _hint(self, out_len: int) -> float:
+        return float(np.log1p(out_len)
+                     + self.rng.normal(0, self.spec.hint_noise))
+
+    def _slo(self, kind: str, stages: int = 1) -> SLOSpec:
+        s = self.spec.slo_scale * float(
+            np.exp(self.rng.normal(0, self.spec.slo_jitter)))
+        if kind == "latency":
+            return SLOSpec("latency", ttft=2.0 * s, tbt=0.1 * s,
+                           ttlt=1e9)
+        if kind == "throughput":
+            return SLOSpec("throughput", ttlt=20.0 * s)
+        if kind == "collective":
+            return SLOSpec("collective", ttlt=20.0 * stages * s)
+        return SLOSpec("none", ttlt=1e9)
+
+    # ------------------------------------------------------------------
+    def _arrivals(self) -> List[float]:
+        sp = self.spec
+        ts, t = [], 0.0
+        rate = sp.rate
+        while t < sp.duration:
+            if sp.bursty and len(ts) % 16 == 0:
+                # BurstGPT-ish: re-draw the short-term rate from a Gamma
+                # (floored so a lull cannot stall the arrival stream)
+                rate = sp.rate * float(self.rng.gamma(0.7, 1.0 / 0.7))
+                rate = max(rate, 0.25 * sp.rate)
+            t += float(self.rng.exponential(1.0 / rate))
+            ts.append(t)
+        return ts
+
+    def _next_rid(self) -> int:
+        self._rid += 1
+        return self._rid
+
+    # ------------------------------------------------------------------
+    def _mk_single(self, kind: str, t: float, app: str) -> Request:
+        li, lo = self._lens(False)
+        r = Request(rid=self._next_rid(), app=app, arrival=t,
+                    prompt_len=li, true_output_len=lo, slo=self._slo(kind))
+        r.meta["hint"] = self._hint(lo)
+        return r
+
+    def _mk_dag(self, t: float) -> Tuple[CollectiveDag, List[Request]]:
+        """ToT math tree (depth 2, 3 thoughts/step) or agentic chain —
+        stage sizes hidden from the scheduler.  ALL per-stage lengths are
+        drawn up-front (hidden ground truth) so the total work is identical
+        across schedulers regardless of completion order."""
+        self._dag += 1
+        if self.rng.random() < 0.5:
+            app, sizes = "math", [3, 3, 1]          # ToT depth-2
+        else:
+            app = "agent"
+            sizes = [1] * int(self.rng.integers(3, 7))   # codegen chain
+        slo = self._slo("collective", stages=len(sizes))
+        dag = CollectiveDag(dag_id=self._dag, app=app, arrival=t,
+                            ttlt=slo.ttlt, stage_sizes=sizes)
+        stage_lens = []
+        for n in sizes:
+            lens = []
+            for _ in range(n):
+                li, lo = self._lens(True)
+                lens.append((max(4, li // max(n, 1)),
+                             max(8, lo // max(sum(sizes), 1))))
+            stage_lens.append(lens)
+        self._dag_lens = getattr(self, "_dag_lens", {})
+        self._dag_lens[dag.dag_id] = stage_lens
+        return dag, self.spawn_stage(dag, 0, t)
+
+    def spawn_stage(self, dag: CollectiveDag, stage: int,
+                    now: float) -> List[Request]:
+        """Stage requests from the precomputed hidden ground truth."""
+        reqs = []
+        for li, lo in self._dag_lens[dag.dag_id][stage]:
+            r = Request(rid=self._next_rid(), app=dag.app, arrival=now,
+                        prompt_len=li, true_output_len=lo,
+                        slo=SLOSpec("collective",
+                                    ttlt=max(dag.deadline - now, 1e-3)),
+                        dag_id=dag.dag_id, stage=stage)
+            r.meta["hint"] = self._hint_det(lo, r.rid)
+            r.meta["n_stages"] = len(dag.stage_sizes)
+            reqs.append(r)
+        return reqs
+
+    def _hint_det(self, out_len: int, salt: int) -> float:
+        """Deterministic hint noise (independent of completion order)."""
+        rng = np.random.default_rng((salt * 1000003 + self.spec.seed)
+                                    % (2 ** 31))
+        return float(np.log1p(out_len)
+                     + rng.normal(0, self.spec.hint_noise))
+
+    # ------------------------------------------------------------------
+    def generate(self):
+        """-> (singles: [Request], dags: [(CollectiveDag, stage0 reqs)])."""
+        sp = self.spec
+        mix = np.array(sp.mix, float)
+        mix = mix / mix.sum()
+        singles: List[Request] = []
+        dags: List[Tuple[CollectiveDag, List[Request]]] = []
+        for t in self._arrivals():
+            u = self.rng.random()
+            if self.rng.random() < sp.best_effort_frac:
+                singles.append(self._mk_single("none", t, "batch"))
+                continue
+            if u < mix[0]:
+                singles.append(self._mk_single("latency", t, "chatbot"))
+            elif u < mix[0] + mix[1]:
+                singles.append(self._mk_single("throughput", t, "code"))
+            else:
+                dags.append(self._mk_dag(t))
+        return singles, dags
+
+    def warmup_requests(self, n: int = 512) -> List[Request]:
+        """Completed-looking requests to bootstrap the predictors.  Uses a
+        dedicated RNG so warm-starting a predictor NEVER perturbs the actual
+        workload stream (schedulers must see identical workloads)."""
+        saved, self.rng = self.rng, np.random.default_rng(
+            self.spec.seed + 777_777)
+        out = []
+        try:
+            for i in range(n):
+                kind = ["latency", "throughput", "collective"][i % 3]
+                app = {"latency": "chatbot", "throughput": "code",
+                       "collective": "math"}[kind]
+                li, lo = self._lens(kind == "collective")
+                r = Request(rid=-i - 1, app=app, arrival=0.0, prompt_len=li,
+                            true_output_len=lo, slo=self._slo(kind))
+                r.meta["hint"] = self._hint(lo)
+                out.append(r)
+        finally:
+            self.rng = saved
+        return out

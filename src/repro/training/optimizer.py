@@ -1,0 +1,117 @@
+"""Pure-JAX optimizers (no optax in the image).
+
+``adamw``     — bf16 params with f32 first/second moments (10 bytes/param).
+``adafactor`` — factored second moment over the last two dims, no momentum,
+                no fp32 master copy (~2 bytes/param + negligible stats).
+                Used for the 1T-param kimi-k2 config where AdamW cannot fit
+                the production mesh (see EXPERIMENTS.md §Dry-run).
+
+Optimizer state mirrors the parameter pytree so sharding rules transfer
+leaf-by-leaf (Adafactor stats get reduced specs derived from the param's).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Any]  # (params, grads, state) -> (p, s)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw(lr: float = 1e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        new_p = jax.tree.unflatten(treedef, [x[0] for x in flat])
+        new_m = jax.tree.unflatten(treedef, [x[1] for x in flat])
+        new_v = jax.tree.unflatten(treedef, [x[2] for x in flat])
+        return new_p, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer("adamw", init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (simplified: beta1=0, factored v for ndim>=2)
+# ---------------------------------------------------------------------------
+def adafactor(lr: float = 1e-4, decay: float = 0.99, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    def _factored(p):
+        return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+    def init(params):
+        def leaf(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"stats": jax.tree.map(leaf, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr = decay * s["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc = decay * s["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                    + eps)
+                cfac = jax.lax.rsqrt(vc + eps)
+                u = g * rfac[..., None] * cfac[..., None, :]
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = decay * s["v"] + (1 - decay) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_s
+
+        is_stat = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        out = jax.tree.map(upd, params, grads, state["stats"],
+                           is_leaf=lambda x: is_stat(x) if isinstance(x, dict) else False)
+        flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        new_p = jax.tree.unflatten(treedef, [x[0] for x in flat])
+        new_s = jax.tree.unflatten(treedef, [x[1] for x in flat])
+        return new_p, {"stats": new_s, "step": step}
+
+    return Optimizer("adafactor", init, update)
+
+
+def get_optimizer(cfg, lr: float = 1e-4) -> Optimizer:
+    return adafactor(lr) if cfg.optimizer == "adafactor" else adamw(lr)

@@ -1,0 +1,54 @@
+"""Cross-layer integration: real JAX decoding under Tempo, the serve
+failover drill, and one true dry-run cell compiled against the 256-chip
+production mesh in a subprocess (the multi-pod config is exercised by the
+full sweep in experiments/dryrun)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_real_jax_serving_with_tempo():
+    from repro.core.scheduler import TempoScheduler
+    from repro.serving.jax_backend import RealServeLoop
+    from repro.serving.request import Request, SLOSpec
+    reqs = [Request(rid=i + 1, app="chatbot", arrival=0.0, prompt_len=12,
+                    true_output_len=8 + 2 * i,
+                    slo=SLOSpec("latency", ttft=5.0, tbt=1.0))
+            for i in range(3)]
+    loop = RealServeLoop("tinyllama-1.1b", slots=4, max_len=64)
+    gen = loop.run(TempoScheduler(use_predictor=False), reqs, max_steps=120)
+    assert all(r.done for r in reqs)
+    assert all(len(gen[r.rid]) >= r.true_output_len for r in reqs)
+
+
+def test_serve_failover_drill():
+    from repro.core.service import ServiceModel
+    from repro.launch.serve import run_with_failover
+    from repro.serving.workload import WorkloadSpec
+    s, info = run_with_failover(
+        "sarathi", WorkloadSpec(rate=3.0, duration=40.0, seed=2),
+        fail_at=20.0, service=ServiceModel())
+    assert info["resubmitted"] > 0
+    assert s.n_finished > 50           # everything drains post-recovery
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell_production_mesh():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "tinyllama-1.1b", "--shape", "decode_32k"],
+        capture_output=True, text=True, env=env, timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout)
+    assert rec["status"] == "ok" and rec["chips"] == 256
+    assert rec["hlo_flops_per_chip"] > 0
+    assert rec["coll_bytes_per_chip"] > 0

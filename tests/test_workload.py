@@ -1,0 +1,69 @@
+"""Workload synthesis vs Table 2 statistics and mix/arrival properties."""
+
+import numpy as np
+
+from repro.serving.workload import TABLE2, WorkloadGen, WorkloadSpec
+
+
+def test_table2_medians_approximate():
+    gen = WorkloadGen(WorkloadSpec(rate=50.0, duration=200.0, seed=0,
+                                   mix=(1, 1, 0), best_effort_frac=0.0))
+    singles, _ = gen.generate()
+    ins = np.array([r.prompt_len for r in singles])
+    outs = np.array([r.true_output_len for r in singles])
+    assert abs(np.median(ins) - TABLE2[("chatbot", "single", "in")][2]) \
+        <= 0.5 * TABLE2[("chatbot", "single", "in")][2] + 10
+    assert abs(np.median(outs) - TABLE2[("chatbot", "single", "out")][2]) \
+        <= 0.5 * TABLE2[("chatbot", "single", "out")][2] + 10
+
+
+def test_mix_ratio_roughly_3_1_1():
+    gen = WorkloadGen(WorkloadSpec(rate=30.0, duration=120.0, seed=1,
+                                   best_effort_frac=0.0))
+    singles, dags = gen.generate()
+    lat = sum(r.slo.kind == "latency" for r in singles)
+    thr = sum(r.slo.kind == "throughput" for r in singles)
+    coll = len(dags)
+    total = lat + thr + coll
+    assert abs(lat / total - 0.6) < 0.08
+    assert abs(thr / total - 0.2) < 0.08
+    assert abs(coll / total - 0.2) < 0.08
+
+
+def test_arrivals_sorted_and_bounded():
+    gen = WorkloadGen(WorkloadSpec(rate=5.0, duration=60.0, seed=2))
+    singles, dags = gen.generate()
+    ts = sorted([r.arrival for r in singles] + [d.arrival for d, _ in dags])
+    assert all(b >= a for a, b in zip(ts, ts[1:]))
+    assert ts[-1] >= 55.0
+
+
+def test_bursty_has_higher_variance():
+    def iat_var(bursty):
+        gen = WorkloadGen(WorkloadSpec(rate=5.0, duration=400.0, seed=3,
+                                       bursty=bursty))
+        singles, dags = gen.generate()
+        ts = np.sort(np.array([r.arrival for r in singles]
+                              + [d.arrival for d, _ in dags]))
+        return np.var(np.diff(ts))
+    assert iat_var(True) > 1.5 * iat_var(False)
+
+
+def test_slo_scaling():
+    g1 = WorkloadGen(WorkloadSpec(seed=4, slo_scale=1.0, slo_jitter=0.0))
+    g2 = WorkloadGen(WorkloadSpec(seed=4, slo_scale=2.0, slo_jitter=0.0))
+    r1 = g1._mk_single("throughput", 0.0, "code")
+    r2 = g2._mk_single("throughput", 0.0, "code")
+    assert abs(r2.slo.ttlt / r1.slo.ttlt - 2.0) < 1e-6
+
+
+def test_hidden_stage_lengths_deterministic():
+    def total_work(seed):
+        gen = WorkloadGen(WorkloadSpec(rate=3.0, duration=60.0, seed=seed))
+        singles, dags = gen.generate()
+        w = sum(r.true_output_len for r in singles)
+        for d, reqs0 in dags:
+            for lens in gen._dag_lens[d.dag_id]:
+                w += sum(o for _, o in lens)
+        return w
+    assert total_work(9) == total_work(9)
