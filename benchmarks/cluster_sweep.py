@@ -1,0 +1,58 @@
+"""Cluster-layer benchmark: replicas × router policies, plus an autoscaler
+ramp drill.
+
+  PYTHONPATH=src python -m benchmarks.run --only cluster
+
+Sweeps fleet size (1/2/4 replicas quick, up to 8 full) against every router
+policy on a mixed latency/deadline/DAG workload near fleet saturation, and
+runs one goodput-targeted autoscaling scenario under a triangular load ramp.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.cluster.autoscaler import AutoscalerConfig
+from repro.cluster.router import ROUTERS
+from repro.serving.run import run_cluster_experiment
+from repro.serving.workload import WorkloadSpec
+
+
+def cluster_sweep(quick: bool = True) -> List[dict]:
+    rows = []
+    fleet_sizes = (1, 2, 4) if quick else (1, 2, 4, 8)
+    per_replica_rate = 11.0         # keeps every fleet near saturation
+    duration = 18.0 if quick else 60.0
+    for n in fleet_sizes:
+        spec = WorkloadSpec(rate=per_replica_rate * n, duration=duration,
+                            seed=4)
+        for router in ROUTERS:
+            if n == 1 and router != "round-robin":
+                continue            # routers are equivalent at fleet size 1
+            t0 = time.time()
+            f = run_cluster_experiment("tempo", router=router, n_replicas=n,
+                                       spec=spec, warmup=192)
+            row = f.row()
+            row.update(bench="replicas_x_router", n_replicas=n,
+                       wall_s=round(time.time() - t0, 1))
+            rows.append(row)
+
+    # autoscaler drill: triangular ramp to 5x base load
+    t0 = time.time()
+    spec = WorkloadSpec(rate=6.0, duration=60.0 if quick else 240.0,
+                        seed=3, ramp_peak=5.0)
+    f = run_cluster_experiment(
+        "tempo", router="slo-margin", n_replicas=1, spec=spec, warmup=192,
+        autoscale=True,
+        autoscaler_cfg=AutoscalerConfig(min_replicas=1, max_replicas=6,
+                                        cooldown=6.0, window=20.0))
+    row = f.row()
+    row.update(bench="autoscale_ramp",
+               timeline=[(round(t, 1), n) for t, n in f.replica_timeline],
+               wall_s=round(time.time() - t0, 1))
+    rows.append(row)
+    return rows
+
+
+ALL = {"cluster_sweep": cluster_sweep}

@@ -58,9 +58,11 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks.common import save
+    from benchmarks.cluster_sweep import ALL as CLUSTER
     from benchmarks.paper_figs import ALL
 
     benches = dict(ALL)
+    benches.update(CLUSTER)
     benches["kernels"] = lambda quick=True: _kernel_bench()
     names = [n for n in benches if (not args.only or args.only in n)]
 

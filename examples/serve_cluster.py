@@ -1,0 +1,61 @@
+"""Cluster serving: one workload, N co-simulated replicas, SLO-aware routing.
+
+  PYTHONPATH=src python examples/serve_cluster.py [--autoscale]
+
+Default: routes a mixed-SLO workload (paper §2.1: latency streams, deadline
+jobs, collective agent DAGs) across a 4-replica fleet under every router
+policy and compares fleet goodput.  --autoscale: starts from one replica
+under a 5x triangular load ramp and lets the goodput-driven autoscaler grow
+and drain the fleet.
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.cluster.autoscaler import AutoscalerConfig   # noqa: E402
+from repro.cluster.router import ROUTERS                # noqa: E402
+from repro.serving.run import run_cluster_experiment    # noqa: E402
+from repro.serving.workload import WorkloadSpec         # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--autoscale", action="store_true")
+    args = ap.parse_args()
+
+    if args.autoscale:
+        spec = WorkloadSpec(rate=6.0, duration=60.0, seed=3, ramp_peak=5.0)
+        f = run_cluster_experiment(
+            "tempo", router="slo-margin", n_replicas=1, spec=spec,
+            warmup=192, autoscale=True,
+            autoscaler_cfg=AutoscalerConfig(min_replicas=1, max_replicas=6,
+                                            cooldown=6.0, window=20.0))
+        print(f"fleet goodput={f.goodput_frac:.3f} "
+              f"finished={f.fleet.n_finished}")
+        print("replica-count timeline (t, n_active):")
+        for t, n in f.replica_timeline:
+            print(f"  {t:7.1f}s  {'█' * n} {n}")
+        return
+
+    spec = WorkloadSpec(rate=44.0, duration=18.0, seed=4)
+    print(f"{'router':<14} {'goodput':>8} {'gain':>10} {'lat met':>8} "
+          f"{'coll met':>9} {'routed/replica'}")
+    for router in ROUTERS:
+        f = run_cluster_experiment("tempo", router=router, n_replicas=4,
+                                   spec=spec, warmup=192)
+        pt = f.fleet.per_type
+        get = lambda k: pt.get(k, {}).get("slo_met", float("nan"))
+        routed = [n for _, n in sorted(f.routed.items())]
+        print(f"{router:<14} {f.goodput_frac:>8.4f} "
+              f"{f.fleet.service_gain:>10.0f} {get('latency'):>8.3f} "
+              f"{get('collective'):>9.3f} {routed}")
+    print("\nslo-margin routes each SLO class by its binding resource "
+          "(decode slots, backlog margin, long-run DAG work share) -> "
+          "highest fleet goodput near saturation.")
+
+
+if __name__ == "__main__":
+    main()

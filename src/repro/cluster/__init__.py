@@ -1,0 +1,15 @@
+"""Cluster serving layer: SLO-aware multi-replica routing, co-simulated
+replicas, and goodput-driven autoscaling on top of ``ServeEngine``."""
+
+from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+from repro.cluster.engine import ClusterEngine, Replica
+from repro.cluster.router import (JoinShortestQueueRouter,
+                                  LeastKVPressureRouter, ROUTERS,
+                                  RoundRobinRouter, Router, SLOMarginRouter,
+                                  make_router)
+
+__all__ = [
+    "Autoscaler", "AutoscalerConfig", "ClusterEngine", "Replica",
+    "Router", "RoundRobinRouter", "JoinShortestQueueRouter",
+    "LeastKVPressureRouter", "SLOMarginRouter", "ROUTERS", "make_router",
+]

@@ -1,0 +1,78 @@
+"""Goodput-driven autoscaler: grow/drain the fleet on SLO attainment.
+
+Scaling signal is *fleet goodput* (fraction of recently finished requests
+that met their SLO, sliding window) plus queue pressure as an early-warning
+overload signal — attainment is a lagging indicator when nothing finishes.
+Hysteresis: scale up below ``up_below``, drain only above ``down_above``
+(> up_below) *and* with near-empty queues, with a cooldown between actions,
+so the fleet never flaps.  Draining is graceful: a draining replica stops
+receiving traffic, finishes its backlog, then retires.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Optional, Tuple
+
+from repro.core.service import ServiceModel
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass
+class AutoscalerConfig:
+    target: float = 0.9            # fleet SLO-attainment objective
+    up_below: float = 0.85         # attainment below this -> add replica
+    down_above: float = 0.97       # attainment above this -> consider drain
+    up_queue_frac: float = 1.5     # mean queue/replica > frac*max_batch -> up
+    down_queue_frac: float = 0.35  # drain only when queues this empty
+    window: float = 30.0           # s of finishes in the attainment window
+    cooldown: float = 15.0         # s between scaling actions
+    min_replicas: int = 1
+    max_replicas: int = 8
+    min_samples: int = 16          # finishes needed before acting on goodput
+    cold_start_s: float = 2.0      # new replica boots this long after spawn
+
+
+class Autoscaler:
+    def __init__(self, config: Optional[AutoscalerConfig] = None,
+                 service: Optional[ServiceModel] = None):
+        self.cfg = config or AutoscalerConfig()
+        self.service = service or ServiceModel()
+        self._fin: Deque[Tuple[float, bool]] = deque()
+        self._last_action_t = -1e18
+        self.actions: list = []        # (t, "+1"/"-1", n_active_after)
+
+    # ------------------------------------------------------------------
+    def observe_finish(self, req: Request, t: float) -> None:
+        self._fin.append((t, self.service.slo_met(req)))
+
+    def attainment(self, t: float) -> Optional[float]:
+        while self._fin and self._fin[0][0] < t - self.cfg.window:
+            self._fin.popleft()
+        if len(self._fin) < self.cfg.min_samples:
+            return None
+        return sum(1 for _, ok in self._fin if ok) / len(self._fin)
+
+    # ------------------------------------------------------------------
+    def decide(self, t: float, n_active: int, mean_queue: float,
+               max_batch: int) -> int:
+        """-> +1 (spawn), -1 (drain one), or 0.  ``mean_queue`` is live+
+        queued requests per active replica."""
+        c = self.cfg
+        if t - self._last_action_t < c.cooldown:
+            return 0
+        att = self.attainment(t)
+        overloaded = mean_queue > c.up_queue_frac * max_batch
+        if n_active < c.max_replicas and \
+                (overloaded or (att is not None and att < c.up_below)):
+            self._last_action_t = t
+            self.actions.append((t, +1, n_active + 1))
+            return +1
+        if n_active > c.min_replicas and att is not None \
+                and att > c.down_above \
+                and mean_queue < c.down_queue_frac * max_batch:
+            self._last_action_t = t
+            self.actions.append((t, -1, n_active - 1))
+            return -1
+        return 0

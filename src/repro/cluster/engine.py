@@ -1,0 +1,169 @@
+"""ClusterEngine: one workload, N co-simulated ``ServeEngine`` replicas.
+
+Conservative discrete-event co-simulation.  Each replica is an unmodified
+``ServeEngine`` (own scheduler, own KV pool, own backend, own clock); the
+cluster loop always processes the globally earliest event — either the next
+workload arrival (routed to a replica and enqueued) or one engine step of
+the replica whose ``peek_next_event()`` is smallest.  An arrival is routed
+*before* any busier replica's clock passes it, so router decisions see every
+replica's state as of the arrival instant (up to engine-step granularity,
+the same discretisation a single engine has).
+
+Collective DAGs are dispatched atomically: the ("dag", (dag, stage0)) event
+lands on one replica, whose engine spawns all later stages locally through
+the shared ``WorkloadGen`` — stage advancement never crosses replicas.
+
+Autoscaling hooks in at event granularity: the ``Autoscaler`` watches the
+fleet's finished-request stream and queue depths, spawns replicas (with a
+cold-start delay) or gracefully drains them (no new traffic, retire when
+empty).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.cluster.autoscaler import Autoscaler
+from repro.cluster.router import Router
+from repro.serving.engine import ServeEngine
+from repro.serving.request import ReqState, Request
+
+
+class Replica:
+    def __init__(self, rid: int, engine: ServeEngine,
+                 spawned_at: float = 0.0):
+        self.rid = rid
+        self.engine = engine
+        self.spawned_at = spawned_at
+        self.draining = False
+        self.retired_at: Optional[float] = None
+        self._fin_cursor = 0           # engine.finished already harvested
+
+    # -- router-facing load signals ------------------------------------
+    def live_count(self) -> int:
+        return sum(1 for r in self.engine.requests.values()
+                   if r.state != ReqState.FINISHED)
+
+    def queue_len(self) -> int:
+        """Live requests plus not-yet-admitted queued ones."""
+        q = self.live_count()
+        for kind, obj in self.engine.pending_items():
+            q += 1 if kind == "r" else len(obj[1])
+        return q
+
+    def kv_used_frac(self) -> float:
+        kv = self.engine.kv
+        return 1.0 - len(kv.free) / max(kv.num_blocks, 1)
+
+
+class ClusterEngine:
+    def __init__(self, replica_factory: Callable[[int], ServeEngine],
+                 router: Router, n_replicas: int = 2,
+                 autoscaler: Optional[Autoscaler] = None):
+        if n_replicas < 1:
+            raise ValueError("a cluster needs at least one replica")
+        self.replica_factory = replica_factory
+        self.router = router
+        self.autoscaler = autoscaler
+        self.replicas: List[Replica] = [
+            Replica(i, replica_factory(i)) for i in range(n_replicas)]
+        self._next_rid = n_replicas
+        self.now = 0.0                   # fleet clock (max event time seen)
+        self.routed: Dict[int, int] = {rep.rid: 0 for rep in self.replicas}
+        # (t, n_active) recorded at every fleet-size change
+        self.replica_timeline: List[Tuple[float, int]] = [(0.0, n_replicas)]
+
+    # ------------------------------------------------------------------
+    def active(self) -> List[Replica]:
+        return [rep for rep in self.replicas
+                if not rep.draining and rep.retired_at is None]
+
+    def _stepable(self) -> List[Replica]:
+        return [rep for rep in self.replicas if rep.retired_at is None]
+
+    # ------------------------------------------------------------------
+    def run(self, stream) -> Dict[int, List[Request]]:
+        """Drive the co-simulation to completion over an arrival stream of
+        (t, kind, obj) events.  Returns {replica_id: finished requests}."""
+        it = iter(stream)
+        nxt = next(it, None)
+        while True:
+            evs = [(rep.engine.peek_next_event(), rep.rid, rep)
+                   for rep in self._stepable()]
+            evs = [e for e in evs if e[0] is not None]
+            t_rep = min(evs)[0] if evs else None
+            if nxt is not None and (t_rep is None or nxt[0] <= t_rep):
+                t, kind, obj = nxt
+                nxt = next(it, None)
+                self.now = max(self.now, t)
+                self._maybe_scale(self.now)
+                rep = self.router.route(kind, obj, self.active(), t)
+                rep.engine.enqueue(kind, obj)
+                self.routed[rep.rid] = self.routed.get(rep.rid, 0) \
+                    + (1 if kind == "r" else len(obj[1]))
+                continue
+            if not evs:
+                break
+            _, _, rep = min(evs)
+            if not rep.engine.step_once():     # max_steps safety valve
+                rep.retired_at = rep.engine.now
+                continue
+            self.now = max(self.now, rep.engine.now)
+            self._harvest(rep)
+            if rep.draining and rep.engine.peek_next_event() is None:
+                rep.retired_at = rep.engine.now
+        for rep in self.replicas:              # drain stragglers' stats
+            self._harvest(rep)
+        return {rep.rid: rep.engine.finished for rep in self.replicas}
+
+    # ------------------------------------------------------------------
+    def _harvest(self, rep: Replica) -> None:
+        new = rep.engine.finished[rep._fin_cursor:]
+        if not new:
+            return
+        rep._fin_cursor = len(rep.engine.finished)
+        if self.autoscaler is not None:
+            for r in new:
+                self.autoscaler.observe_finish(r, r.finish_t)
+            self._maybe_scale(self.now)
+
+    def _maybe_scale(self, t: float) -> None:
+        if self.autoscaler is None:
+            return
+        act = self.active()
+        if not act:
+            return
+        mean_queue = sum(rep.queue_len() for rep in act) / len(act)
+        d = self.autoscaler.decide(t, len(act), mean_queue,
+                                   act[0].engine.cfg.max_batch)
+        if d > 0:
+            self._spawn(t)
+        elif d < 0:
+            self._drain(t, act)
+
+    def _spawn(self, t: float) -> None:
+        rid = self._next_rid
+        self._next_rid += 1
+        eng = self.replica_factory(rid)
+        eng.now = t + self.autoscaler.cfg.cold_start_s
+        rep = Replica(rid, eng, spawned_at=t)
+        self.replicas.append(rep)
+        self.routed[rid] = 0
+        self.replica_timeline.append((t, len(self.active())))
+
+    def _drain(self, t: float, act: List[Replica]) -> None:
+        # drain the emptiest replica: least work lost behind the barrier
+        rep = min(act, key=lambda r: (r.queue_len(), -r.rid))
+        rep.draining = True
+        if rep.engine.peek_next_event() is None:
+            rep.retired_at = t
+        self.replica_timeline.append((t, len(self.active())))
+
+    # ------------------------------------------------------------------
+    @property
+    def makespan(self) -> float:
+        return max([self.now] + [rep.engine.now for rep in self.replicas])
+
+    @property
+    def preempt_count(self) -> int:
+        return sum(rep.engine.preempt_count for rep in self.replicas)

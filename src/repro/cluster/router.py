@@ -1,0 +1,260 @@
+"""Cluster routers: which replica does an arriving request land on?
+
+All policies dispatch collective DAGs **atomically** — every stage sibling
+(and all later stages, which the replica's engine spawns locally) runs on
+one replica, so ``CollectiveDag`` advancement never crosses replicas.  A
+cross-replica stage handoff would need KV-less stage boundaries plus dag
+state migration; the paper's DAGs are stage-barriered so the atomic policy
+loses nothing and keeps the engine contract intact.
+
+Policies (JITServe's grouped margin-goodput idea lifted to fleet level):
+
+  round-robin  — arrival-order striping; the no-information baseline.
+  jsq          — join-shortest-queue on live+queued request count.
+  least-kv     — most free KV blocks first (prefill-heavy traffic lands
+                 where paging pressure is lowest), queue-length tiebreak.
+  slo-margin   — estimate, per replica, how much fleet goodput *margin*
+                 admitting the work would burn: the shortfall of the new
+                 request against its own SLO under the replica's current
+                 backlog, plus the degradation it inflicts on the replica's
+                 live deadline work.  Dispatch where the margin degrades
+                 least.  Uses each replica's own SLOTracker speed profile,
+                 so slow/hot replicas organically shed load.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.service import ServiceModel
+from repro.core.slo_tracker import SLOTracker
+from repro.serving.request import ReqState, Request
+
+
+class Router:
+    """``route(kind, obj, replicas, now)`` -> chosen replica.
+
+    ``kind`` is "r" (obj: Request) or "dag" (obj: (CollectiveDag, reqs));
+    ``replicas`` are the routable (active, non-draining) replicas, never
+    empty.  Implementations must be deterministic."""
+
+    name = "base"
+
+    def route(self, kind: str, obj, replicas: List, now: float):
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def item_requests(kind: str, obj) -> List[Request]:
+        return [obj] if kind == "r" else list(obj[1])
+
+
+class RoundRobinRouter(Router):
+    name = "round-robin"
+
+    def __init__(self):
+        self._i = 0
+
+    def route(self, kind: str, obj, replicas: List, now: float):
+        rep = replicas[self._i % len(replicas)]
+        self._i += 1
+        return rep
+
+
+class JoinShortestQueueRouter(Router):
+    name = "jsq"
+
+    def route(self, kind: str, obj, replicas: List, now: float):
+        return min(replicas, key=lambda rep: (rep.queue_len(), rep.rid))
+
+
+class LeastKVPressureRouter(Router):
+    name = "least-kv"
+
+    def route(self, kind: str, obj, replicas: List, now: float):
+        return min(replicas,
+                   key=lambda rep: (rep.kv_used_frac(), rep.queue_len(),
+                                    rep.rid))
+
+
+# ---------------------------------------------------------------------------
+class SLOMarginRouter(Router):
+    """Dispatch where the estimated goodput margin degrades least.
+
+    Each SLO class is routed by the resource that actually binds its margin:
+
+      latency     — TBT/TTFT bind on decode-slot pressure, so streams are
+                    balanced on the per-replica latency-stream census (live
+                    + dispatched), not on total work.
+      collective  — a DAG's load materialises over its whole multi-stage
+                    lifetime, long after dispatch; instantaneous queue state
+                    is stale by then and chasing it synchronises load waves.
+                    DAGs are balanced on cumulative routed stage-work (long-
+                    run weighted striping).
+      throughput  — TTLT binds on backlog: expected wait plus the projected
+                    margin loss (the new request's shortfall under this
+                    replica's backlog + the degradation admitting it
+                    inflicts on the replica's live deadline work), priced
+                    via each replica's own SLOTracker speed profile.
+    """
+
+    name = "slo-margin"
+
+    def __init__(self, service: Optional[ServiceModel] = None,
+                 margin_cap: int = 64, route_alpha: float = 4.0,
+                 gain_rate: float = 3000.0):
+        self.service = service or ServiceModel()
+        self._fallback = SLOTracker()   # speeds before a replica has steps
+        self.margin_cap = margin_cap    # live requests examined per replica
+        # sharper decay than the service model's alpha: goodput is binary at
+        # the deadline, so routing should weight the cliff, not the tail
+        self.route_alpha = route_alpha
+        # converts margin loss (gain units) into equivalent seconds of
+        # replica capacity, so it composes with the expected-wait signal:
+        # burning G gain ~ wasting G/gain_rate seconds of useful service
+        self.gain_rate = gain_rate
+        self._dag_work: Dict[int, float] = {}   # rid -> routed stage-work
+
+    # -- coarse router-side length estimate ----------------------------
+    @staticmethod
+    def _est_out(req: Request) -> float:
+        """The router sees the same imprecise information the analyzer does:
+        the noisy log-length hint (no oracle access to true_output_len)."""
+        if req.pred_upper is not None:
+            return float(req.pred_upper)
+        hint = req.meta.get("hint")
+        if hint is not None:
+            return float(np.clip(math.expm1(hint), 8.0, 16384.0))
+        return 256.0
+
+    def _tracker(self, rep) -> SLOTracker:
+        tr = getattr(rep.engine.sched, "tracker", None)
+        return tr if tr is not None else self._fallback
+
+    def _serve_time(self, tr: SLOTracker, req: Request) -> float:
+        return tr.est_prefill_time(req.prefill_remaining) \
+            + tr.est_decode_time(self._est_out(req))
+
+    def _backlog(self, rep, tr: SLOTracker) -> Tuple[float, List[Request]]:
+        """Estimated queueing delay the new work inherits: total remaining
+        service of live AND not-yet-admitted (dispatched while the replica's
+        clock lags) requests, spread over the decode slots.  Pending DAG
+        events carry their full multi-stage work — a queued agent chain is
+        ~n_stages× the work a queue-length count sees."""
+        live = [r for r in rep.engine.requests.values()
+                if r.state != ReqState.FINISHED]
+        total = 0.0
+        for r in live:
+            rem = tr.est_remaining_time(r, self._est_out(r))
+            if r.dag_id is not None:
+                # in-flight DAGs still owe their unspawned stages; without
+                # this, chain-heavy replicas look light and attract traffic
+                stages_left = max(int(r.meta.get("n_stages", 1))
+                                  - r.stage, 1)
+                rem *= stages_left
+            total += rem
+        for kind, obj in rep.engine.pending_items():
+            pend = self.item_requests(kind, obj)
+            mult = max(int(pend[0].meta.get("n_stages", 1)), 1) \
+                if kind == "dag" else 1
+            total += mult * sum(self._serve_time(tr, r) for r in pend)
+        slots = max(rep.engine.cfg.max_batch, 1)
+        return total / slots, live
+
+    def _shortfall(self, req: Request, est_ttlt: float) -> float:
+        """Goodput margin burned if the request lands at est_ttlt: the gap
+        between its max gain and the cliff-decayed projected gain."""
+        if req.slo.kind == "none":
+            return 0.0
+        est_out = self._est_out(req)
+        if req.slo.kind == "latency":
+            budget = req.slo.ttft + req.slo.tbt * max(est_out - 1.0, 0.0)
+        else:
+            budget = max(req.deadline - req.arrival, 1e-3)
+        full = self.service.w_in * req.prompt_len + self.service.w_out \
+            * est_out
+        if est_ttlt <= budget:
+            return 0.0
+        return full * (1.0 - (budget / est_ttlt) ** self.route_alpha)
+
+    # -- per-class dispatch --------------------------------------------
+    def _route_dag(self, reqs: List[Request], replicas: List):
+        stages = max(int(reqs[0].meta.get("n_stages", 1)), 1)
+        # weight by calibrated fleet speeds (any live tracker will do —
+        # striping only needs consistent relative work estimates)
+        tr = self._tracker(replicas[0])
+        work = stages * sum(self._serve_time(tr, r) for r in reqs)
+        rep = min(replicas,
+                  key=lambda rp: (self._dag_work.get(rp.rid, 0.0), rp.rid))
+        self._dag_work[rep.rid] = self._dag_work.get(rep.rid, 0.0) + work
+        return rep
+
+    def _latency_census(self, rep) -> int:
+        n = sum(1 for r in rep.engine.requests.values()
+                if r.state != ReqState.FINISHED
+                and r.slo.kind == "latency")
+        for kind, obj in rep.engine.pending_items():
+            n += sum(1 for r in self.item_requests(kind, obj)
+                     if r.slo.kind == "latency")
+        return n
+
+    def route(self, kind: str, obj, replicas: List, now: float):
+        reqs = self.item_requests(kind, obj)
+        if kind == "dag":
+            return self._route_dag(reqs, replicas)
+        if reqs[0].slo.kind == "latency":
+            return min(replicas,
+                       key=lambda rep: (self._latency_census(rep), rep.rid))
+        stages = 1
+        best, best_key = None, None
+        for rep in replicas:
+            tr = self._tracker(rep)
+            wait, live = self._backlog(rep, tr)
+            serve = sum(self._serve_time(tr, r) for r in reqs) * stages
+            # new work: shortfall against its own SLO under this backlog
+            cost = sum(
+                self._shortfall(r, (now - r.arrival) + wait
+                                + self._serve_time(tr, r) * stages)
+                for r in reqs)
+            # existing work: admitting `serve` seconds of tokens delays the
+            # replica's live deadline work by ~serve/slots each.  Stride-
+            # sample busy replicas and rescale — truncating would make the
+            # MOST loaded replica look cheapest, a herding feedback loop.
+            delay = serve / max(rep.engine.cfg.max_batch, 1)
+            live_slo = [r for r in live if r.slo.kind != "none"]
+            stride = max(1, -(-len(live_slo) // self.margin_cap))
+            sample = live_slo[::stride]
+            scale = len(live_slo) / max(len(sample), 1)
+            deg = 0.0
+            for r in sample:
+                base = (now - r.arrival) + tr.est_remaining_time(
+                    r, self._est_out(r))
+                deg += self._shortfall(r, base + delay) \
+                    - self._shortfall(r, base)
+            cost += scale * deg
+            # expected wait is the base load signal; margin loss is a
+            # correction in capacity-seconds.  A pure margin score would
+            # herd every arrival onto the first zero-cost replica whenever
+            # no deadline binds anywhere.
+            key = (wait + cost / self.gain_rate, rep.rid)
+            if best is None or key < best_key:
+                best, best_key = rep, key
+        return best
+
+
+ROUTERS = {
+    "round-robin": RoundRobinRouter,
+    "jsq": JoinShortestQueueRouter,
+    "least-kv": LeastKVPressureRouter,
+    "slo-margin": SLOMarginRouter,
+}
+
+
+def make_router(name: str, **kw) -> Router:
+    if name not in ROUTERS:
+        raise ValueError(f"unknown router {name!r}; "
+                         f"choose from {sorted(ROUTERS)}")
+    return ROUTERS[name](**kw)

@@ -78,13 +78,16 @@ class EngineConfig:
 
 class ServeEngine:
     def __init__(self, backend, scheduler: SchedulerBase,
-                 config: EngineConfig = EngineConfig(),
+                 config: Optional[EngineConfig] = None,
                  workload: Optional[WorkloadGen] = None):
         self.backend = backend
         self.sched = scheduler
-        self.cfg = config
+        # NOTE: config must default to None — a dataclass instance in the
+        # signature default would be shared across every engine, silently
+        # coupling cluster replicas through one EngineConfig object.
+        self.cfg = config if config is not None else EngineConfig()
         self.workload = workload
-        self.kv = BlockManager(config.kv_blocks,
+        self.kv = BlockManager(self.cfg.kv_blocks,
                                kv_bytes_per_token=getattr(
                                    backend, "kv_bytes", 131072))
         self.requests: Dict[int, Request] = {}
@@ -95,17 +98,24 @@ class ServeEngine:
         self.step_log: List[Tuple[float, int, int]] = []
         self.preempt_count = 0
         self.swap_bytes = 0.0
+        self._pending: List[Tuple[float, int, object]] = []
+        self._seq = 0
 
     # ------------------------------------------------------------------
     def load(self, singles: List[Request],
              dags: List[Tuple[CollectiveDag, List[Request]]]):
-        self._pending: List[Tuple[float, int, object]] = []
-        n = 0
         for r in singles:
-            heapq.heappush(self._pending, (r.arrival, n := n + 1, ("r", r)))
+            self.enqueue("r", r)
         for dag, reqs in dags:
-            heapq.heappush(self._pending,
-                           (dag.arrival, n := n + 1, ("dag", (dag, reqs))))
+            self.enqueue("dag", (dag, reqs))
+
+    def enqueue(self, kind: str, obj) -> None:
+        """Queue one future arrival: ("r", Request) or
+        ("dag", (CollectiveDag, stage0 requests)).  Cluster routers call
+        this to dispatch events onto a replica mid-simulation."""
+        t = obj.arrival if kind == "r" else obj[0].arrival
+        self._seq += 1
+        heapq.heappush(self._pending, (t, self._seq, (kind, obj)))
 
     # ------------------------------------------------------------------
     def _tracker(self):
@@ -142,20 +152,61 @@ class ServeEngine:
         return best
 
     # ------------------------------------------------------------------
+    # Narrow stepping interface (also drives cluster co-simulation)
+    # ------------------------------------------------------------------
+    def has_live(self) -> bool:
+        return any(r.state != ReqState.FINISHED
+                   for r in self.requests.values())
+
+    def peek_next_event(self) -> Optional[float]:
+        """Earliest time this engine can make progress: its own clock while
+        requests are live, else the next queued arrival; None when idle.
+        Never earlier than the engine's own clock — a cold-starting replica
+        (clock pre-advanced past spawn) cannot serve an arrival queued
+        before it booted."""
+        if self.has_live():
+            return self.now
+        if self._pending:
+            return max(self._pending[0][0], self.now)
+        return None
+
+    def pending_items(self) -> List[Tuple[str, object]]:
+        """Queued not-yet-admitted arrivals as (kind, obj) pairs — the
+        public view of the arrival queue for cluster routers/metrics."""
+        return [(kind, obj) for _, _, (kind, obj) in self._pending]
+
+    def admit_arrived(self) -> None:
+        """Admit every queued arrival whose time has been reached."""
+        while self._pending and self._pending[0][0] <= self.now:
+            _, _, (kind, obj) = heapq.heappop(self._pending)
+            if kind == "r":
+                self._admit(obj)
+            else:
+                dag, reqs = obj
+                self.dags[dag.dag_id] = dag
+                self._on_stage_start(dag, reqs, stage=0)
+
+    def step_once(self) -> bool:
+        """Admit arrivals, jump the clock over an idle gap if needed, and
+        run ONE scheduler step.  Returns False when out of work/steps."""
+        if self.step >= self.cfg.max_steps:
+            return False
+        self.admit_arrived()
+        if not self.has_live():
+            if not self._pending:
+                return False
+            self.now = max(self.now, self._pending[0][0])
+            self.admit_arrived()
+            if not self.has_live():
+                return False
+        self._execute(self.sched.schedule(self._view()))
+        return True
+
+    # ------------------------------------------------------------------
     def run(self, until: Optional[float] = None, drain: bool = True):
-        live = lambda: any(r.state != ReqState.FINISHED
-                           for r in self.requests.values())
         while self.step < self.cfg.max_steps:
-            # admit everything that has arrived
-            while self._pending and self._pending[0][0] <= self.now:
-                _, _, (kind, obj) = heapq.heappop(self._pending)
-                if kind == "r":
-                    self._admit(obj)
-                else:
-                    dag, reqs = obj
-                    self.dags[dag.dag_id] = dag
-                    self._on_stage_start(dag, reqs, stage=0)
-            if not live():
+            self.admit_arrived()
+            if not self.has_live():
                 if self._pending and (until is None
                                       or self._pending[0][0] < until):
                     self.now = max(self.now, self._pending[0][0])
@@ -163,11 +214,7 @@ class ServeEngine:
                 break
             if until is not None and self.now >= until and not drain:
                 break
-
-            view = self._view()
-            dec = self.sched.schedule(view)
-            self._execute(dec)
-
+            self._execute(self.sched.schedule(self._view()))
         return self.finished
 
     # ------------------------------------------------------------------
@@ -257,8 +304,31 @@ class ServeEngine:
             return False
         return self.kv.ensure(rid, tokens)
 
+    def _force_evict(self) -> None:
+        """Deadlock breaker: every KV holder was protected this step and an
+        allocation failed, so no request can grow and the engine would spin
+        burning only overhead.  Swap out the newest-arrival resident
+        sequence (vLLM-style preempt-newest) so older work can progress;
+        the victim swaps back in once blocks free up."""
+        victims = [r for r in self.requests.values()
+                   if r.state != ReqState.FINISHED
+                   and r.rid in self.kv.seqs
+                   and self.kv.seqs[r.rid].blocks
+                   and not self.kv.seqs[r.rid].swapped]
+        if not victims:
+            return
+        v = max(victims, key=lambda r: (r.arrival, r.rid))
+        moved = self.kv.swap_out(v.rid)
+        self.swap_bytes += moved
+        self._step_swap += moved
+        if v.state in (ReqState.RUNNING, ReqState.PREFILL):
+            v.state = ReqState.PREEMPTED
+            v.preemptions += 1
+            self.preempt_count += 1
+
     def _execute(self, dec):
         self._step_swap = 0.0
+        self._kv_blocked = False
         # displaced requests: slot lost; KV stays resident until pressure
         for rid in dec.preempted:
             r = self.requests.get(rid)
@@ -274,6 +344,7 @@ class ServeEngine:
             if r is None or r.state == ReqState.FINISHED:
                 continue
             if not self._ensure_kv(rid, r.prefilled + chunk, protect):
+                self._kv_blocked = True
                 continue  # KV pressure: skip this chunk
             r.prefilled = min(r.prompt_len, r.prefilled + chunk)
             r.state = ReqState.PREFILL
@@ -288,10 +359,14 @@ class ServeEngine:
                 continue
             ctx = r.prompt_len + r.decoded
             if not self._ensure_kv(rid, ctx + 1, protect):
+                self._kv_blocked = True
                 continue
             r.state = ReqState.RUNNING
             decode_ctxs.append(ctx)
             decoded_reqs.append(r)
+
+        if not prefill_tokens and not decode_ctxs and self._kv_blocked:
+            self._force_evict()
 
         dt = self.backend.step_time(prefill_tokens, decode_ctxs)
         dt += self._step_swap / self.cfg.swap_bw

@@ -45,11 +45,17 @@ class BlockManager:
 
     # ------------------------------------------------------------------
     def ensure(self, rid: int, tokens: int) -> bool:
-        """Grow rid's allocation to cover `tokens`; False if OOM."""
-        a = self.seqs.setdefault(rid, SeqAlloc(blocks=[]))
+        """Grow rid's allocation to cover `tokens`; False if OOM.  A failed
+        first allocation must NOT leave an empty SeqAlloc behind — phantom
+        zero-token holders would look like eviction victims whose swap-out
+        frees nothing."""
+        a = self.seqs.get(rid)
+        if a is None:
+            a = SeqAlloc(blocks=[])
         need = -(-tokens // self.block_tokens) - len(a.blocks)
         if need > len(self.free):
             return False
+        self.seqs[rid] = a
         for _ in range(max(need, 0)):
             a.blocks.append(self.free.pop())
         a.tokens = max(a.tokens, tokens)

@@ -1,10 +1,12 @@
 """Metrics: service gain (total & timeline), SLO goodput, per-type latency
-percentiles, throughput — everything the paper's figures report."""
+percentiles, throughput — everything the paper's figures report — plus
+fleet-level aggregation for cluster runs (per-replica breakdown and the
+replica-count timeline)."""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -80,3 +82,55 @@ def summarize(name: str, finished: List[Request], service: ServiceModel,
         goodput_frac=len(met) / max(len(finished), 1),
         throughput_tok_s=toks / mk, makespan=mk, per_type=per_type,
         gain_timeline=timeline, preemptions=preemptions)
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class FleetSummary:
+    """Cluster-level rollup: the fleet-wide Summary plus the per-replica
+    breakdown and the autoscaler's replica-count timeline."""
+    router: str
+    fleet: Summary
+    per_replica: Dict[int, Summary]
+    replica_timeline: List[Tuple[float, int]]   # (t, n_active) on change
+    routed: Dict[int, int]                      # requests routed per replica
+
+    @property
+    def goodput_frac(self) -> float:
+        return self.fleet.goodput_frac
+
+    @property
+    def n_replicas_peak(self) -> int:
+        return max(n for _, n in self.replica_timeline)
+
+    def row(self) -> Dict[str, float]:
+        r = self.fleet.row()
+        r["router"] = self.router
+        r["replicas_peak"] = self.n_replicas_peak
+        r["replicas_final"] = self.replica_timeline[-1][1]
+        return r
+
+
+def summarize_fleet(router: str, scheduler: str,
+                    finished_by_replica: Dict[int, List[Request]],
+                    service: ServiceModel, makespan: float,
+                    replica_timeline: Optional[
+                        List[Tuple[float, int]]] = None,
+                    routed: Optional[Dict[int, int]] = None,
+                    preemptions: int = 0,
+                    preempt_by_replica: Optional[Dict[int, int]] = None
+                    ) -> FleetSummary:
+    all_fin: List[Request] = [r for fin in finished_by_replica.values()
+                              for r in fin]
+    fleet = summarize(f"{scheduler}@{router}", all_fin, service, makespan,
+                      preemptions=preemptions)
+    pbr = preempt_by_replica or {}
+    per_replica = {
+        rid: summarize(f"{scheduler}@{router}/r{rid}", fin, service,
+                       makespan, preemptions=pbr.get(rid, 0))
+        for rid, fin in finished_by_replica.items()}
+    return FleetSummary(
+        router=router, fleet=fleet, per_replica=per_replica,
+        replica_timeline=replica_timeline or [(0.0,
+                                               len(finished_by_replica))],
+        routed=routed or {})

@@ -1,14 +1,17 @@
-"""One-call experiment runner: workload × scheduler × backend -> Summary."""
+"""One-call experiment runners: workload × scheduler × backend -> Summary
+(single replica) or workload × scheduler × router × fleet -> FleetSummary
+(cluster co-simulation)."""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 from repro.core.baselines import make_scheduler
 from repro.core.service import ServiceModel
 from repro.serving.engine import EngineConfig, ServeEngine, SimBackend
-from repro.serving.metrics import Summary, summarize
+from repro.serving.metrics import (FleetSummary, Summary, summarize,
+                                   summarize_fleet)
 from repro.serving.workload import WorkloadGen, WorkloadSpec
 
 
@@ -41,3 +44,74 @@ def run_experiment(scheduler: str = "tempo",
     return summarize(sched.name if hasattr(sched, "name") else scheduler,
                      finished, service, eng.now,
                      preemptions=eng.preempt_count)
+
+
+# ---------------------------------------------------------------------------
+def run_cluster_experiment(scheduler: str = "tempo",
+                           router: Union[str, object] = "slo-margin",
+                           n_replicas: int = 2,
+                           spec: Optional[WorkloadSpec] = None,
+                           engine_cfg: Optional[EngineConfig] = None,
+                           backend_factory=None,
+                           service: Optional[ServiceModel] = None,
+                           warmup: int = 512,
+                           sched_kwargs: Optional[Dict] = None,
+                           autoscale: bool = False,
+                           autoscaler_cfg=None) -> FleetSummary:
+    """Serve one workload across ``n_replicas`` co-simulated replicas.
+
+    Mirrors ``run_experiment``: same workload/scheduler knobs, plus a router
+    policy (name from ``cluster.router.ROUTERS`` or an instance) and
+    optional goodput-driven autoscaling.  Every replica gets its OWN
+    scheduler, backend, EngineConfig copy, and KV pool; they share only the
+    ``WorkloadGen`` (collective-DAG ground truth) and the arrival stream.
+    """
+    from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+    from repro.cluster.engine import ClusterEngine
+    from repro.cluster.router import make_router
+
+    spec = spec or WorkloadSpec()
+    engine_cfg = engine_cfg or EngineConfig()
+    service = service or ServiceModel()
+    backend_factory = backend_factory or (
+        lambda rid: SimBackend.for_model("llama-8b"))
+    base_sk = dict(sched_kwargs or {})
+    if scheduler.startswith("tempo") and scheduler != "tempo-sjf":
+        base_sk.setdefault("service", service)
+
+    gen = WorkloadGen(spec)
+    warm: List[List] = []       # generated once, on the first replica that
+                                # needs predictor warm-start (own RNG, so a
+                                # lazy mid-stream draw never perturbs the
+                                # arrival stream)
+
+    def replica_factory(rid: int) -> ServeEngine:
+        sched = make_scheduler(scheduler, **dict(base_sk))
+        if warmup and getattr(sched, "needs_predictions", False):
+            pred = getattr(sched, "predictor", None)
+            if pred is not None:
+                if not warm:
+                    warm.append(gen.warmup_requests(warmup))
+                pred.warm_start(warm[0])
+        return ServeEngine(backend_factory(rid), sched,
+                           dataclasses.replace(engine_cfg), workload=gen)
+
+    if isinstance(router, str):
+        # a caller-supplied router INSTANCE keeps its own ServiceModel
+        kw = {"service": service} if router == "slo-margin" else {}
+        rt = make_router(router, **kw)
+    else:
+        rt = router
+    scaler = Autoscaler(autoscaler_cfg or AutoscalerConfig(),
+                        service=service) if autoscale else None
+    cluster = ClusterEngine(replica_factory, rt, n_replicas=n_replicas,
+                            autoscaler=scaler)
+    finished = cluster.run(gen.arrival_stream())
+    return summarize_fleet(rt.name, scheduler, finished, service,
+                           cluster.makespan,
+                           replica_timeline=cluster.replica_timeline,
+                           routed=cluster.routed,
+                           preemptions=cluster.preempt_count,
+                           preempt_by_replica={
+                               rep.rid: rep.engine.preempt_count
+                               for rep in cluster.replicas})

@@ -55,6 +55,7 @@ class WorkloadSpec:
     mix: Tuple[float, float, float] = (3, 1, 1)   # latency:throughput:coll
     best_effort_frac: float = 0.05    # extra non-SLO traffic
     bursty: bool = False              # BurstGPT-style gamma-modulated rate
+    ramp_peak: float = 1.0            # peak rate multiplier at mid-duration
     slo_scale: float = 1.0
     slo_jitter: float = 0.3           # per-user SLO heterogeneity
     hint_noise: float = 0.8
@@ -97,6 +98,8 @@ class WorkloadGen:
     # ------------------------------------------------------------------
     def _arrivals(self) -> List[float]:
         sp = self.spec
+        if sp.ramp_peak != 1.0:
+            return self._arrivals_ramp()
         ts, t = [], 0.0
         rate = sp.rate
         while t < sp.duration:
@@ -107,6 +110,32 @@ class WorkloadGen:
                 rate = max(rate, 0.25 * sp.rate)
             t += float(self.rng.exponential(1.0 / rate))
             ts.append(t)
+        return ts
+
+    def _arrivals_ramp(self) -> List[float]:
+        """Non-homogeneous Poisson by thinning: instantaneous rate ramps
+        rate -> rate*ramp_peak at mid-duration and back down (triangular),
+        the load profile autoscaling drills exercise.  Separate code path so
+        ramp_peak=1.0 workloads keep their exact historical RNG stream.
+        ``bursty`` composes: the short-term Gamma rate factor multiplies the
+        ramp rate (clamped so thinning stays valid)."""
+        sp = self.spec
+        burst_cap = 2.5
+        rmax = sp.rate * max(1.0, sp.ramp_peak) \
+            * (burst_cap if sp.bursty else 1.0)
+        ts, t = [], 0.0
+        burst, since = 1.0, 16
+        while t < sp.duration:
+            t += float(self.rng.exponential(1.0 / rmax))
+            if sp.bursty and since >= 16:
+                burst = float(np.clip(self.rng.gamma(0.7, 1.0 / 0.7),
+                                      0.25, burst_cap))
+                since = 0
+            tri = 1.0 - abs(2.0 * t / sp.duration - 1.0)
+            r_t = sp.rate * (1.0 + (sp.ramp_peak - 1.0) * tri) * burst
+            if self.rng.random() < r_t / rmax:
+                ts.append(t)
+                since += 1
         return ts
 
     def _next_rid(self) -> int:
@@ -170,24 +199,32 @@ class WorkloadGen:
                      + rng.normal(0, self.spec.hint_noise))
 
     # ------------------------------------------------------------------
-    def generate(self):
-        """-> (singles: [Request], dags: [(CollectiveDag, stage0 reqs)])."""
+    def arrival_stream(self) -> Iterator[Tuple[float, str, object]]:
+        """Time-ordered arrival events, consumable incrementally — a cluster
+        router pulls one event at a time and dispatches it to a replica.
+        Yields (t, "r", Request) or (t, "dag", (CollectiveDag, stage0 reqs));
+        the RNG draw order is identical to ``generate()`` so single-engine
+        and cluster runs see the same workload."""
         sp = self.spec
         mix = np.array(sp.mix, float)
         mix = mix / mix.sum()
-        singles: List[Request] = []
-        dags: List[Tuple[CollectiveDag, List[Request]]] = []
         for t in self._arrivals():
             u = self.rng.random()
             if self.rng.random() < sp.best_effort_frac:
-                singles.append(self._mk_single("none", t, "batch"))
-                continue
-            if u < mix[0]:
-                singles.append(self._mk_single("latency", t, "chatbot"))
+                yield t, "r", self._mk_single("none", t, "batch")
+            elif u < mix[0]:
+                yield t, "r", self._mk_single("latency", t, "chatbot")
             elif u < mix[0] + mix[1]:
-                singles.append(self._mk_single("throughput", t, "code"))
+                yield t, "r", self._mk_single("throughput", t, "code")
             else:
-                dags.append(self._mk_dag(t))
+                yield t, "dag", self._mk_dag(t)
+
+    def generate(self):
+        """-> (singles: [Request], dags: [(CollectiveDag, stage0 reqs)])."""
+        singles: List[Request] = []
+        dags: List[Tuple[CollectiveDag, List[Request]]] = []
+        for _, kind, obj in self.arrival_stream():
+            (singles if kind == "r" else dags).append(obj)
         return singles, dags
 
     def warmup_requests(self, n: int = 512) -> List[Request]:

@@ -1,0 +1,63 @@
+"""Minimal stand-in for the slice of the `hypothesis` API this suite uses,
+so property tests still run (as fixed-seed random sampling) on machines
+without hypothesis installed.  No shrinking, no database — just
+``max_examples`` draws per test from a deterministic RNG."""
+
+import sys
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def sampled_from(elements):
+    xs = list(elements)
+    return _Strategy(lambda rng: xs[int(rng.integers(0, len(xs)))])
+
+
+def lists(elements, min_size=0, max_size=10):
+    return _Strategy(lambda rng: [
+        elements.draw(rng)
+        for _ in range(int(rng.integers(min_size, max_size + 1)))])
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        def runner():
+            n = getattr(runner, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples",
+                                DEFAULT_MAX_EXAMPLES))
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                fn(**{k: s.draw(rng) for k, s in strats.items()})
+        # keep pytest introspection on the wrapper's zero-arg signature
+        # (functools.wraps would expose the strategy params as fixtures)
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+    return deco
+
+
+# lets ``from _hypothesis_fallback import strategies as st`` mirror
+# ``from hypothesis import strategies as st``
+strategies = sys.modules[__name__]

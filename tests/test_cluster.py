@@ -1,0 +1,135 @@
+"""Cluster layer: single-replica parity with the single engine, router
+policies, DAG routing atomicity, SLO-margin goodput win, autoscaling."""
+
+import pytest
+
+from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+from repro.cluster.engine import ClusterEngine
+from repro.cluster.router import ROUTERS, make_router
+from repro.core.baselines import make_scheduler
+from repro.serving.engine import EngineConfig, ServeEngine, SimBackend
+from repro.serving.run import run_cluster_experiment, run_experiment
+from repro.serving.workload import WorkloadGen, WorkloadSpec
+
+SMALL = WorkloadSpec(rate=8.0, duration=20.0, seed=0)
+
+
+def test_arrival_stream_matches_generate():
+    a = WorkloadGen(SMALL)
+    b = WorkloadGen(SMALL)
+    events = list(a.arrival_stream())
+    singles, dags = b.generate()
+    assert [t for t, _, _ in events] == sorted(t for t, _, _ in events)
+    got_singles = [o.rid for _, k, o in events if k == "r"]
+    got_dags = [o[0].dag_id for _, k, o in events if k == "dag"]
+    assert got_singles == [r.rid for r in singles]
+    assert got_dags == [d.dag_id for d, _ in dags]
+
+
+def test_single_replica_cluster_reproduces_single_engine():
+    spec = WorkloadSpec(rate=2.0, duration=40.0, seed=7)
+    single = run_experiment("tempo", spec=spec, warmup=128)
+    fleet = run_cluster_experiment("tempo", router="round-robin",
+                                   n_replicas=1, spec=spec, warmup=128)
+    assert fleet.fleet.n_finished == single.n_finished
+    assert fleet.fleet.service_gain == pytest.approx(single.service_gain,
+                                                     rel=1e-6)
+    assert fleet.fleet.goodput_frac == pytest.approx(single.goodput_frac,
+                                                     abs=1e-9)
+    assert fleet.fleet.makespan == pytest.approx(single.makespan, rel=1e-6)
+
+
+@pytest.mark.parametrize("router", sorted(ROUTERS))
+def test_all_routers_drain_and_conserve_work(router):
+    f = run_cluster_experiment("sarathi", router=router, n_replicas=2,
+                               spec=SMALL, warmup=0)
+    total = sum(s.n_finished for s in f.per_replica.values())
+    assert total == f.fleet.n_finished
+    assert f.fleet.n_finished > 100
+    assert 0.0 <= f.goodput_frac <= 1.0
+    assert sum(f.routed.values()) > 0
+
+
+def test_dag_routes_atomically_to_one_replica():
+    spec = WorkloadSpec(rate=3.0, duration=20.0, seed=3, mix=(0, 0, 1))
+    gen = WorkloadGen(spec)
+    cluster = ClusterEngine(
+        lambda rid: ServeEngine(SimBackend.for_model("llama-8b"),
+                                make_scheduler("sarathi"), EngineConfig(),
+                                workload=gen),
+        make_router("jsq"), n_replicas=3)
+    finished = cluster.run(gen.arrival_stream())
+    home = {}
+    for rid, fin in finished.items():
+        for r in fin:
+            if r.dag_id is not None:
+                home.setdefault(r.dag_id, set()).add(rid)
+    assert home, "workload should contain DAGs"
+    for dag_id, replicas in home.items():
+        assert len(replicas) == 1, \
+            f"dag {dag_id} spread across replicas {replicas}"
+    # every dag ran to completion on its home replica
+    for rep in cluster.replicas:
+        for dag in rep.engine.dags.values():
+            assert dag.finished
+
+
+def test_slo_margin_beats_round_robin_at_saturation():
+    spec = WorkloadSpec(rate=44.0, duration=18.0, seed=4)
+    rr = run_cluster_experiment("tempo", router="round-robin", n_replicas=4,
+                                spec=spec, warmup=192)
+    margin = run_cluster_experiment("tempo", router="slo-margin",
+                                    n_replicas=4, spec=spec, warmup=192)
+    assert margin.fleet.n_finished == rr.fleet.n_finished  # same total work
+    assert margin.goodput_frac > rr.goodput_frac
+
+
+def test_autoscaler_grows_then_drains_under_ramp():
+    spec = WorkloadSpec(rate=6.0, duration=60.0, seed=3, ramp_peak=5.0)
+    cfg = AutoscalerConfig(min_replicas=1, max_replicas=6, cooldown=6.0,
+                           window=20.0, target=0.9)
+    f = run_cluster_experiment("tempo", router="slo-margin", n_replicas=1,
+                               spec=spec, warmup=192, autoscale=True,
+                               autoscaler_cfg=cfg)
+    counts = [n for _, n in f.replica_timeline]
+    assert max(counts) > 1, "fleet never grew under the ramp"
+    assert counts[-1] < max(counts), "fleet never drained after the peak"
+    assert f.goodput_frac >= cfg.target
+
+
+def test_autoscaler_hysteresis_and_cooldown():
+    cfg = AutoscalerConfig(window=10.0, cooldown=5.0, min_samples=4,
+                           up_below=0.85, down_above=0.97,
+                           min_replicas=1, max_replicas=4)
+    a = Autoscaler(cfg)
+
+    class _Req:
+        pass
+
+    class _SM:
+        def __init__(self, ok):
+            self.ok = ok
+
+        def slo_met(self, r):
+            return self.ok
+
+    a.service = _SM(False)
+    for i in range(6):
+        a.observe_finish(_Req(), 0.5 * i)
+    # low attainment -> scale up, then cooldown suppresses a second action
+    assert a.decide(3.0, n_active=2, mean_queue=1.0, max_batch=64) == +1
+    assert a.decide(4.0, n_active=3, mean_queue=1.0, max_batch=64) == 0
+    # high attainment + empty queues -> drain (after cooldown)
+    a.service = _SM(True)
+    for i in range(8):
+        a.observe_finish(_Req(), 14.0 + 0.1 * i)
+    # at t=15 the failed finishes have slid out of the window
+    assert a.decide(15.0, n_active=3, mean_queue=0.5, max_batch=64) == -1
+    # at min_replicas never drains
+    assert a.decide(30.0, n_active=1, mean_queue=0.0, max_batch=64) == 0
+
+
+def test_autoscaler_scales_up_on_queue_pressure_before_finishes():
+    a = Autoscaler(AutoscalerConfig(cooldown=0.0))
+    # no finished requests yet -> goodput unknown, but queues exploding
+    assert a.decide(1.0, n_active=1, mean_queue=200.0, max_batch=64) == +1

@@ -101,6 +101,136 @@ def test_kv_eviction_swaps_preempted_victims():
     assert eng.kv.seqs[1].swapped
 
 
+def test_kv_swap_roundtrip_under_tiny_pool():
+    """Swap-out then swap-in round trip: KV comes back intact, both
+    directions are charged to the step, and no request is lost."""
+    from repro.core.baselines import make_scheduler
+    from repro.serving.request import Request, SLOSpec
+    eng = ServeEngine(SimBackend.for_model("llama-8b"),
+                      make_scheduler("sarathi"), EngineConfig(kv_blocks=4))
+    victim = Request(rid=1, app="code", arrival=0.0, prompt_len=256,
+                     true_output_len=10, slo=SLOSpec("throughput"))
+    victim.state = ReqState.PREEMPTED
+    eng.requests[1] = victim
+    assert eng.kv.ensure(1, 256)                  # 2 of 4 blocks
+    newcomer = Request(rid=2, app="code", arrival=0.0, prompt_len=384,
+                       true_output_len=10, slo=SLOSpec("throughput"))
+    eng.requests[2] = newcomer
+    eng._step_swap = 0.0
+    assert eng._ensure_kv(2, 384, protect={2})    # forces victim out
+    assert eng.kv.seqs[1].swapped
+    out_cost = eng._step_swap
+    assert out_cost > 0
+    # newcomer leaves; victim's KV must swap back in, charged to the step
+    eng.kv.release(2)
+    del eng.requests[2]
+    eng._step_swap = 0.0
+    assert eng._ensure_kv(1, 256, protect={1})
+    assert not eng.kv.seqs[1].swapped
+    assert eng.kv.seqs[1].tokens >= 256           # nothing lost in transit
+    assert eng._step_swap == pytest.approx(out_cost)  # in costs like out
+    assert eng.kv.swapped_tokens == 0
+
+
+def test_kv_pressure_swap_time_charged_end_to_end():
+    """Same tiny-pool workload at two swap bandwidths: the slower link must
+    stretch the makespan (swap bytes are charged to step time), and every
+    generated request still completes."""
+    from repro.core.baselines import make_scheduler
+    spec = WorkloadSpec(dataset="chatbot", rate=20.0, duration=6.0,
+                        seed=9, mix=(3, 1, 0))
+    makespans = []
+    for bw in (60e9, 1e9):
+        gen = WorkloadGen(spec)
+        singles, dags = gen.generate()
+        cfg = EngineConfig(kv_blocks=48, swap_bw=bw)
+        eng = ServeEngine(SimBackend.for_model("llama-8b"),
+                          make_scheduler("sarathi"), cfg, workload=gen)
+        eng.load(singles, dags)
+        fin = eng.run()
+        assert eng.swap_bytes > 0                 # pool small enough to swap
+        expected = len(singles) + sum(sum(d.stage_sizes) for d, _ in dags)
+        assert len(fin) == expected               # no request lost
+        makespans.append(eng.now)
+    assert makespans[1] > makespans[0]
+
+
+def test_dag_stage_advances_only_after_slowest_sibling():
+    """Stage siblings finishing out of order must not advance the DAG until
+    the LAST sibling completes (exercises _maybe_advance_dag)."""
+    from repro.core.baselines import make_scheduler
+    from repro.serving.request import CollectiveDag, Request, SLOSpec
+
+    class StubWorkload:
+        def __init__(self):
+            self.spawned = []
+
+        def spawn_stage(self, dag, stage, now):
+            self.spawned.append((stage, now))
+            return [Request(rid=100 + stage, app=dag.app, arrival=now,
+                            prompt_len=8, true_output_len=4,
+                            slo=SLOSpec("collective",
+                                        ttlt=max(dag.deadline - now, 1e-3)),
+                            dag_id=dag.dag_id, stage=stage)]
+
+    wl = StubWorkload()
+    eng = ServeEngine(SimBackend.for_model("llama-8b"),
+                      make_scheduler("sarathi"), EngineConfig(),
+                      workload=wl)
+    dag = CollectiveDag(dag_id=1, app="agent", arrival=0.0, ttlt=600.0,
+                        stage_sizes=[2, 1])
+    slo = SLOSpec("collective", ttlt=600.0)
+    fast = Request(rid=1, app="agent", arrival=0.0, prompt_len=8,
+                   true_output_len=4, slo=slo, dag_id=1, stage=0)
+    slow = Request(rid=2, app="agent", arrival=0.0, prompt_len=8,
+                   true_output_len=200, slo=slo, dag_id=1, stage=0)
+    eng.load([], [(dag, [fast, slow])])
+    eng.run()
+    assert fast.finish_t < slow.finish_t          # out-of-order finishes
+    assert [s for s, _ in wl.spawned] == [1]      # stage 1 spawned once...
+    assert wl.spawned[0][1] >= slow.finish_t      # ...after the laggard
+    assert dag.cur_stage == 1 and dag.finished
+    assert eng.requests[101].finish_t >= slow.finish_t
+
+
+def test_dag_remaining_is_max_over_unfinished_siblings():
+    """_dag_remaining must report the slowest stage sibling's estimate —
+    finishing one sibling early doesn't finish the stage."""
+    from repro.core.baselines import make_scheduler
+    from repro.serving.request import CollectiveDag, Request, SLOSpec
+    sched = make_scheduler("tempo-precise")
+    eng = ServeEngine(SimBackend.for_model("llama-8b"), sched,
+                      EngineConfig())
+    slo = SLOSpec("collective", ttlt=60.0)
+    fast = Request(rid=1, app="math", arrival=0.0, prompt_len=8,
+                   true_output_len=4, slo=slo, dag_id=7, stage=0)
+    slow = Request(rid=2, app="math", arrival=0.0, prompt_len=8,
+                   true_output_len=400, slo=slo, dag_id=7, stage=0)
+    eng._admit(fast)
+    eng._admit(slow)
+    tr = sched.tracker
+    expect = tr.est_remaining_time(slow, slow.true_output_len)
+    assert eng._dag_remaining(1) == pytest.approx(expect)
+    assert eng._dag_remaining(2) == pytest.approx(expect)
+    # once the slow sibling finishes, only the fast one remains
+    slow.state = ReqState.FINISHED
+    expect_fast = tr.est_remaining_time(fast, fast.true_output_len)
+    assert eng._dag_remaining(1) == pytest.approx(expect_fast)
+
+
+def test_engine_config_not_shared_between_engines():
+    """Regression: a dataclass default instance in the signature coupled
+    every engine to ONE EngineConfig."""
+    from repro.core.baselines import make_scheduler
+    a = ServeEngine(SimBackend.for_model("llama-8b"),
+                    make_scheduler("sarathi"))
+    b = ServeEngine(SimBackend.for_model("llama-8b"),
+                    make_scheduler("sarathi"))
+    assert a.cfg is not b.cfg
+    a.cfg.max_batch = 1
+    assert b.cfg.max_batch != 1
+
+
 def test_summary_math():
     s = run_experiment("sarathi", spec=SPEC, warmup=0)
     tot = sum(v["n"] for v in s.per_type.values())
