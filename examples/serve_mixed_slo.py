@@ -4,9 +4,10 @@
 
 Default: full scheduler comparison across a bursty mixed-SLO workload with
 per-type latency breakdown (paper fig. 14 style) on the simulated replica.
---real: the same Tempo scheduler drives REAL JAX decoding of a reduced
-tinyllama on CPU (batched requests, per-slot KV caches) — deliverable (b)'s
-"serve a small model with batched requests".
+--real: the same ServeEngine + Tempo scheduler drive REAL JAX decoding of
+a reduced tinyllama on CPU against a device-resident paged KV cache
+(``PagedJaxBackend``; DESIGN.md §2) — deliverable (b)'s "serve a small
+model with batched requests".
 """
 
 import argparse
@@ -22,22 +23,25 @@ def main():
     args = ap.parse_args()
 
     if args.real:
-        import numpy as np
-        from repro.core.scheduler import TempoScheduler
-        from repro.serving.jax_backend import RealServeLoop
+        from repro.core.baselines import make_scheduler
+        from repro.serving.engine import EngineConfig, ServeEngine
+        from repro.serving.jax_backend import PagedJaxBackend
         from repro.serving.workload import WorkloadGen, WorkloadSpec
-        gen = WorkloadGen(WorkloadSpec(rate=2.0, duration=4.0, seed=0))
+        gen = WorkloadGen(WorkloadSpec(rate=2.0, duration=4.0, seed=0,
+                                       prompt_cap=24, output_cap=20,
+                                       slo_scale=20.0))
         singles, _ = gen.generate()
         reqs = singles[:6]
-        for r in reqs:
-            r.true_output_len = min(r.true_output_len, 20)
-            r.prompt_len = min(r.prompt_len, 24)
-        loop = RealServeLoop("tinyllama-1.1b", slots=4, max_len=64)
-        gen_toks = loop.run(TempoScheduler(use_predictor=False), reqs,
-                            max_steps=300)
+        backend = PagedJaxBackend("tinyllama-1.1b", num_blocks=24, page=16,
+                                  max_len=48, seed=0)
+        eng = ServeEngine(backend, make_scheduler("tempo",
+                                                  use_predictor=False),
+                          EngineConfig(max_batch=4, prefill_budget=32))
+        eng.load(reqs, [])
+        eng.run()
         for r in reqs:
             print(f"rid={r.rid} kind={r.slo.kind:<10} done={r.done} "
-                  f"tokens={gen_toks[r.rid][:8]}...")
+                  f"tokens={backend.generated[r.rid][:8]}...")
         print("real JAX decoding under Tempo: OK")
         return
 

@@ -29,6 +29,7 @@ from repro.core.dag import DagMatcher, DagTracker, SuperGraph
 from repro.core.predictor import LengthPredictor
 from repro.core.service import ServiceModel
 from repro.core.slo_tracker import SLOTracker
+from repro.serving.kvcache import BLOCK_TOKENS, block_bytes
 from repro.serving.request import ReqState, Request
 
 
@@ -47,7 +48,10 @@ class EngineView:
     requests: Dict[int, Request]          # all live requests
     max_batch: int                        # decode slots
     prefill_budget: int                   # tokens/step (chunked prefill)
-    kv_block_bytes: int = 2 << 20
+    # block geometry — derived from the shared kvcache constants so the
+    # preemption cost model can't silently disagree with the BlockManager
+    kv_block_bytes: int = block_bytes()
+    block_tokens: int = BLOCK_TOKENS
     swap_bw: float = 60e9                 # HBM<->host for preemption cost
     kv_free_frac: float = 1.0             # KV pool headroom
     dag_remaining: Optional[Callable] = None  # rid -> max sibling remaining
@@ -205,7 +209,7 @@ class TempoScheduler(SchedulerBase):
         stall = 0.0
         if view.kv_free_frac < 0.1:
             kv_bytes = (running.prefilled + running.decoded) \
-                * view.kv_block_bytes / 128.0
+                * view.kv_block_bytes / view.block_tokens
             stall = 2.0 * kv_bytes / view.swap_bw      # out + back in
         d_new = self._priority(cand, view)
         d_old = self._priority(running, view)

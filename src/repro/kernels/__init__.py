@@ -1,1 +1,3 @@
-from repro.kernels.ops import flash_attention, paged_attention  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    flash_attention, paged_attention, paged_gather, paged_kv_append,
+    paged_kv_append_batch)

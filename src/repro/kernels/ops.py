@@ -12,7 +12,9 @@ import functools
 import jax
 
 from repro.kernels.flash_attention import flash_attention as _flash
-from repro.kernels.paged_attention import paged_attention as _paged
+from repro.kernels.paged_attention import (  # noqa: F401  (re-exported)
+    paged_attention as _paged, paged_gather, paged_kv_append,
+    paged_kv_append_batch)
 
 
 def _default_interpret() -> bool:

@@ -74,6 +74,59 @@ def _kernel(tables_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = out.reshape(H, D).astype(o_ref.dtype)
 
 
+def paged_kv_append(k_pages, v_pages, k_new, v_new, block_table, start,
+                    n=None, scrap_page=None):
+    """Chunked-prefill append: scatter a chunk of new KV entries into the
+    paged cache (DESIGN.md §3).
+
+    k_new/v_new: (C, KV, D) entries for token positions start..start+C-1 of
+    ONE sequence whose pages are ``block_table`` ((n_max,) int32, token i
+    lives in page block_table[i // page] slot i % page).  ``n`` (traced
+    scalar) marks how many of the C rows are real — rows past ``n`` are
+    routed to ``scrap_page`` so callers can pad chunks to a few static
+    shapes without corrupting live pages.  Returns (k_pages, v_pages).
+    """
+    C = k_new.shape[0]
+    page = k_pages.shape[1]
+    idx = start + jnp.arange(C)
+    page_ids = block_table[idx // page]
+    offs = idx % page
+    if n is not None:
+        pad = jnp.arange(C) >= n
+        fill = k_pages.shape[0] - 1 if scrap_page is None else scrap_page
+        page_ids = jnp.where(pad, fill, page_ids)
+        offs = jnp.where(pad, 0, offs)
+    k_pages = k_pages.at[page_ids, offs].set(k_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[page_ids, offs].set(v_new.astype(v_pages.dtype))
+    return k_pages, v_pages
+
+
+def paged_kv_append_batch(k_pages, v_pages, k_new, v_new, block_tables,
+                          positions):
+    """Decode-step append: one new KV entry per sequence.
+
+    k_new/v_new: (B, KV, D); block_tables: (B, n_max); positions: (B,) the
+    slot each sequence's new token occupies.  Distinct sequences own
+    disjoint pages, so the scatter never collides.  Returns updated pages.
+    """
+    B = k_new.shape[0]
+    page = k_pages.shape[1]
+    page_ids = block_tables[jnp.arange(B), positions // page]
+    offs = positions % page
+    k_pages = k_pages.at[page_ids, offs].set(k_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[page_ids, offs].set(v_new.astype(v_pages.dtype))
+    return k_pages, v_pages
+
+
+def paged_gather(pages, block_table):
+    """Gather one sequence's pages into a contiguous (n_max*page, KV, D)
+    view — the dense side of the append round-trip (chunked prefill attends
+    over it; positions past the context length must be masked by the
+    caller)."""
+    P, page, KV, D = pages.shape
+    return pages[block_table].reshape(block_table.shape[0] * page, KV, D)
+
+
 def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
                     scale=None, interpret: bool = False):
     """q: (B,H,D); k/v_pages: (P, page, KV, D); block_tables: (B, n_max)

@@ -114,6 +114,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         rec["per_device_bytes"] = args + tmp + max(0, out - alias)
 
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):        # older JAX: one dict per device
+        ca = ca[0] if ca else None
     if ca:
         rec["xla_flops_oncethrough"] = float(ca.get("flops", 0.0))
         rec["xla_bytes_oncethrough"] = float(ca.get("bytes accessed", 0.0))

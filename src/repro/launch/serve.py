@@ -9,7 +9,8 @@ state — the paper §5's "metadata backups enable fast recovery"), unfinished
 requests are resubmitted (prefill recomputed), and serving continues; the
 report includes recovery overhead.
 
---real runs the tiny-model real-execution loop instead (CPU decoding).
+--real serves a length-capped workload on ``PagedJaxBackend`` instead —
+the same engine/scheduler stack over real CPU decoding (DESIGN.md §2).
 """
 
 from __future__ import annotations
@@ -86,19 +87,17 @@ def main() -> None:
                         seed=args.seed, bursty=args.bursty)
 
     if args.real:
-        import numpy as np
-        from repro.core.scheduler import TempoScheduler
-        from repro.serving.jax_backend import RealServeLoop
-        gen = WorkloadGen(WorkloadSpec(rate=1.0, duration=5.0,
-                                       seed=args.seed))
-        singles, _ = gen.generate()
-        reqs = singles[:6]
-        for r in reqs:
-            r.true_output_len = min(r.true_output_len, 24)
-        loop = RealServeLoop("tinyllama-1.1b", slots=4, max_len=96)
-        loop.run(TempoScheduler(use_predictor=False), reqs, max_steps=400)
-        print(json.dumps({r.rid: dict(done=r.done, decoded=r.decoded)
-                          for r in reqs}))
+        # same engine/scheduler stack, real paged-KV execution
+        from repro.serving.run import run_experiment
+        spec = WorkloadSpec(rate=1.0, duration=5.0, seed=args.seed,
+                            prompt_cap=48, output_cap=24, slo_scale=20.0)
+        s = run_experiment(args.scheduler, spec=spec, service=service,
+                           engine_cfg=EngineConfig(max_batch=8,
+                                                   prefill_budget=48),
+                           backend="jax",
+                           backend_kwargs=dict(num_blocks=64, page=16,
+                                               max_len=96, seed=args.seed))
+        print(json.dumps(s.row()))
         return
 
     if args.fail_at is not None:

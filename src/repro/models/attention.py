@@ -155,6 +155,78 @@ def gqa_apply(x, p, cfg, ctx, mode, cache=None, index=None):
 
 
 # ---------------------------------------------------------------------------
+# GQA over a paged KV cache (real serving path; DESIGN.md §3)
+# ---------------------------------------------------------------------------
+def gqa_prefill_paged(x, p, cfg, pages, block_table, start, n):
+    """Chunked-prefill attention for ONE sequence against paged KV.
+
+    x: (1, C, D) chunk hidden states — rows at or past ``n`` are padding
+    (chunks are padded to a few static shapes to bound recompiles); their
+    KV is routed to the scrap page and their outputs are discarded by the
+    caller.  ``block_table``: (n_max,) pages owned by the sequence; token i
+    lives at pages[block_table[i // page], i % page].  ``start``: tokens
+    already resident (earlier chunks).  Chunk KV is scattered FIRST, then
+    queries attend over the gathered table under a causal position mask, so
+    history and intra-chunk causality share one code path.
+    Returns (out (1, C, D), new pages)."""
+    from repro.kernels.paged_attention import paged_gather, paged_kv_append
+    B, C, D = x.shape
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    G = H // KV
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    pos = start + jnp.arange(C)
+    if cfg.positional == "rope":
+        cos, sin = rope_tables(pos, Dh, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    kp, vp = paged_kv_append(pages["k"], pages["v"], k[0], v[0],
+                             block_table, start, n=n)
+    keys = paged_gather(kp, block_table)                # (L, KV, Dh)
+    vals = paged_gather(vp, block_table)
+    L = keys.shape[0]
+    qg = q.reshape(B, C, KV, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bckgd,lkd->bckgl", qg,
+                   keys.astype(jnp.float32)) * (Dh ** -0.5)
+    live = jnp.arange(L)[None, :] <= pos[:, None]       # (C, L) causal
+    s = jnp.where(live[None, :, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bckgl,lkd->bckgd", w, vals.astype(jnp.float32))
+    o = o.reshape(B, C, H, Dh)
+    out = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["wo"])
+    return out, {"k": kp, "v": vp}
+
+
+def gqa_decode_paged(x, p, cfg, pages, block_tables, positions, *,
+                     interpret=False):
+    """Batched one-token decode against paged KV via the Pallas kernel.
+
+    x: (B, 1, D); block_tables: (B, n_max); positions: (B,) — the slot the
+    new token's KV occupies (context length BEFORE this token).  Each
+    sequence decodes at its own position; rope is applied per-sequence.
+    Returns (out (B, 1, D), new pages)."""
+    from repro.kernels.paged_attention import (paged_attention,
+                                               paged_kv_append_batch)
+    B, _, D = x.shape
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.positional == "rope":
+        cos, sin = rope_tables(positions[:, None], Dh, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    kp, vp = paged_kv_append_batch(pages["k"], pages["v"], k[:, 0], v[:, 0],
+                                   block_tables, positions)
+    o = paged_attention(q[:, 0], kp, vp, block_tables,
+                        (positions + 1).astype(jnp.int32),
+                        scale=Dh ** -0.5, interpret=interpret)   # (B, H, Dh)
+    out = jnp.einsum("bhk,hkd->bd", o.astype(x.dtype), p["wo"])[:, None, :]
+    return out, {"k": kp, "v": vp}
+
+
+# ---------------------------------------------------------------------------
 # MLA (DeepSeek-style multi-head latent attention)
 # ---------------------------------------------------------------------------
 def _mla_q(x, p, cfg):

@@ -29,7 +29,7 @@ from repro.configs.base import ModelConfig
 from repro.configs.shapes import Shape
 from repro.models.layers import lm_loss, rms_norm, sinusoidal_embedding
 from repro.models.partition import NULL_CTX, AxisCtx
-from repro.models.transformer import stack_apply
+from repro.models.transformer import stack_apply, stack_apply_paged
 
 
 class _KeyGen:
@@ -240,6 +240,79 @@ class Model:
         logits = jnp.einsum("bd,dv->bv", x[:, 0], params["lm_head"],
                             preferred_element_type=jnp.float32)
         return logits[..., :self.cfg.vocab_size], caches
+
+    # ------------------------------------------------------------------
+    # Paged-KV serving entry points (DESIGN.md §3).  The KV cache is one
+    # device-resident page pool per attention layer; sequences own pages
+    # through block tables handed in by the serving engine's BlockManager.
+    # ------------------------------------------------------------------
+    def supports_paged(self) -> bool:
+        """Paged serving covers pure-attention stacks (any FFN) with rope
+        or no positional encoding — recurrent mixers have no paged state
+        and sinusoidal embeds would need per-sequence position offsets."""
+        cfg = self.cfg
+        return (all(m == "attn" for m, _ in
+                    cfg.prefix_pattern + cfg.unit_pattern)
+                and cfg.positional in ("rope", "none")
+                and cfg.frontend == "none")
+
+    def paged_cache_specs(self, num_pages: int, page: int):
+        """Page pools per attention layer: k/v (num_pages, page, KV, Dh);
+        scanned units carry the leading num_units dim like cache_specs."""
+        cfg = self.cfg
+        KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        dt = jnp.dtype(cfg.dtype)
+
+        def kv(stack=0):
+            shape = (num_pages, page, KV, hd)
+            if stack:
+                shape = (stack,) + shape
+            return {"k": jax.ShapeDtypeStruct(shape, dt),
+                    "v": jax.ShapeDtypeStruct(shape, dt)}
+
+        prefix = tuple(kv() for _ in cfg.prefix_pattern)
+        units = {f"l{i}": kv(stack=cfg.num_units)
+                 for i in range(len(cfg.unit_pattern))}
+        return {"prefix": prefix, "units": units}
+
+    def init_paged_caches(self, num_pages: int, page: int):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.paged_cache_specs(num_pages, page))
+
+    def kv_bytes_per_token(self) -> int:
+        """True per-token KV footprint of this model's paged cache."""
+        cfg = self.cfg
+        n_attn = len(cfg.prefix_pattern) \
+            + cfg.num_units * len(cfg.unit_pattern)
+        return int(2 * cfg.num_kv_heads * cfg.resolved_head_dim
+                   * jnp.dtype(cfg.dtype).itemsize * n_attn)
+
+    def prefill_paged(self, params, pages, tokens, start, block_table, n):
+        """Append one prompt chunk's KV for a single sequence.
+
+        tokens: (1, C) with rows past ``n`` as padding; start: tokens
+        already resident.  No logits are produced — the first decode step
+        re-runs the final prompt token (its KV write is idempotent), so
+        every emitted token flows through decode_paged uniformly."""
+        x = self._embed(params, {"tokens": tokens}, "prefill")
+        _, new_pages = stack_apply_paged(x, params, self.cfg, self.ctx,
+                                         "prefill", pages, block_table,
+                                         start, n)
+        return new_pages
+
+    def decode_paged(self, params, pages, tokens, positions, block_tables,
+                     *, interpret: bool = False):
+        """One batched decode step: tokens (B,1) i32 at per-sequence write
+        positions (B,); block_tables (B, n_max).  Returns (logits (B, V),
+        new pages)."""
+        x = self._embed(params, {"tokens": tokens}, "decode", index=0)
+        x, new_pages = stack_apply_paged(x, params, self.cfg, self.ctx,
+                                         "decode", pages, block_tables,
+                                         positions, interpret=interpret)
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", x[:, 0], params["lm_head"],
+                            preferred_element_type=jnp.float32)
+        return logits[..., :self.cfg.vocab_size], new_pages
 
     # ------------------------------------------------------------------
     def cache_specs(self, B: int, S: int):

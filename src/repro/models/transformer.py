@@ -7,7 +7,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.attention import gqa_apply, mla_apply
+from repro.models.attention import (gqa_apply, gqa_decode_paged,
+                                    gqa_prefill_paged, mla_apply)
 from repro.models.layers import mlp, rms_norm
 from repro.models.mamba import mamba_apply
 from repro.models.moe import moe_apply
@@ -74,3 +75,56 @@ def stack_apply(x, params, cfg, ctx, mode, caches=None, index=None):
     if mode == "train":
         return x, None
     return x, {"prefix": tuple(new_prefix), "units": unit_caches}
+
+
+# ---------------------------------------------------------------------------
+# Paged-KV serving path (DESIGN.md §3): same layer stack, but attention
+# reads/writes a device-resident page pool addressed by block tables.
+# ---------------------------------------------------------------------------
+def layer_apply_paged(x, lp, mixer, ffn, cfg, ctx, mode, pages, tables, pos,
+                      n=None, interpret=False):
+    if mixer != "attn":
+        raise ValueError(
+            f"paged serving supports 'attn' mixers only, got {mixer!r}")
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if mode == "prefill":
+        mix_out, new_pages = gqa_prefill_paged(h, lp, cfg, pages, tables,
+                                               pos, n)
+    else:
+        mix_out, new_pages = gqa_decode_paged(h, lp, cfg, pages, tables,
+                                              pos, interpret=interpret)
+    x = ctx.hidden(x + mix_out)
+    if ffn != "none":
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y = mlp(h2, lp, ctx) if ffn == "mlp" else moe_apply(h2, lp, cfg, ctx)
+        x = ctx.hidden(x + y)
+    return x, new_pages
+
+
+def stack_apply_paged(x, params, cfg, ctx, mode, pages, tables, pos, n=None,
+                      interpret=False):
+    """Paged analogue of ``stack_apply``.  mode "prefill": ``tables`` is one
+    sequence's (n_max,) block table, ``pos`` the chunk's start offset, ``n``
+    the real chunk length (rows past it are padding).  mode "decode":
+    ``tables`` is (B, n_max), ``pos`` the per-sequence write positions (B,).
+    Returns (x, new pages pytree)."""
+    new_prefix = []
+    for i, (mixer, ffn) in enumerate(cfg.prefix_pattern):
+        x, np_ = layer_apply_paged(x, params["prefix"][f"l{i}"], mixer, ffn,
+                                   cfg, ctx, mode, pages["prefix"][i],
+                                   tables, pos, n, interpret)
+        new_prefix.append(np_)
+
+    def body(carry, xs):
+        up, upages = xs
+        h = carry
+        new_u = {}
+        for i, (mixer, ffn) in enumerate(cfg.unit_pattern):
+            key = f"l{i}"
+            h, nc = layer_apply_paged(h, up[key], mixer, ffn, cfg, ctx, mode,
+                                      upages[key], tables, pos, n, interpret)
+            new_u[key] = nc
+        return h, new_u
+
+    x, unit_pages = jax.lax.scan(body, x, (params["units"], pages["units"]))
+    return x, {"prefix": tuple(new_prefix), "units": unit_pages}

@@ -1,0 +1,139 @@
+"""Backend protocol: one run loop, two execution substrates.
+
+``ServeEngine`` owns request lifecycle, KV block accounting, and SLO
+tracking; *how* a step's work is executed is delegated to a ``Backend``:
+
+  ``SimBackend``      — roofline-derived step-time model of a TPU v5e
+                        serving replica (reproduces the paper's figures at
+                        laptop scale).  All KV/token hooks are no-ops.
+  ``PagedJaxBackend`` — (jax_backend.py) a real reduced model decoding
+                        through the unified Model API against a
+                        device-resident paged KV cache whose block tables
+                        come from the engine's ``BlockManager``.  Step time
+                        is measured wall time.
+
+The hook contract mirrors the engine's bookkeeping exactly — every call
+happens AFTER the corresponding ``BlockManager`` transition succeeded, so a
+backend can mirror block residency 1:1:
+
+  begin_step()                      — start of ``_execute``; reset timers
+  prefill_chunk(req, start, n, tb) — append prompt tokens [start, start+n)
+  decode_batch(reqs, tables)        — one token for every listed request
+  kv_swap_out(rid, table, tokens)   — blocks about to be freed (host copy)
+  kv_swap_in(rid, table)            — blocks reallocated; restore contents
+  kv_release(rid)                   — request finished; drop state
+  step_time(prefill_tokens, ctxs)   — the step's duration (model or wall)
+
+Backends may advertise ``block_tokens`` / ``num_blocks`` so the engine
+sizes its ``BlockManager`` to the device page pool's true geometry, and
+``kv_bytes`` (bytes per KV token) for swap-cost accounting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.kvcache import KV_BYTES_PER_TOKEN
+
+
+class Backend:
+    """Default no-op hooks; subclasses override what they need."""
+
+    # per-token KV footprint (swap cost) — shared geometry constant
+    kv_bytes: float = KV_BYTES_PER_TOKEN
+    block_tokens: Optional[int] = None  # page size; None -> engine default
+    num_blocks: Optional[int] = None    # pool size; None -> EngineConfig
+
+    def begin_step(self) -> None:
+        pass
+
+    def prefill_chunk(self, req, start: int, n: int,
+                      block_table: List[int]) -> None:
+        pass
+
+    def decode_batch(self, reqs: List, tables: List[List[int]]) -> None:
+        pass
+
+    def kv_swap_out(self, rid: int, block_table: List[int],
+                    tokens: int) -> None:
+        pass
+
+    def kv_swap_in(self, rid: int, block_table: List[int]) -> None:
+        pass
+
+    def kv_release(self, rid: int) -> None:
+        pass
+
+    def step_time(self, prefill_tokens: int,
+                  decode_ctxs: List[int]) -> float:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Sampler:
+    """Seeded temperature/top-k sampling, deterministic per (rid, position).
+
+    The RNG is keyed on (seed, rid, pos) — NOT on batch composition — so a
+    request's token stream is identical regardless of which other sequences
+    shared its decode batches (scheduler-order-proof determinism).
+    ``temperature <= 0`` is greedy argmax."""
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    def sample(self, logits: np.ndarray, rid: int, pos: int) -> int:
+        if self.temperature <= 0.0:
+            return int(np.argmax(logits))
+        z = logits.astype(np.float64) / self.temperature
+        if self.top_k > 0 and self.top_k < z.size:
+            kth = np.partition(z, -self.top_k)[-self.top_k]
+            z = np.where(z >= kth, z, -np.inf)
+        rng = np.random.default_rng(
+            (self.seed, rid & 0x7FFFFFFF, pos & 0x7FFFFFFF))
+        g = rng.gumbel(size=z.shape)
+        return int(np.argmax(z + g))
+
+
+# ---------------------------------------------------------------------------
+class SimBackend(Backend):
+    """Step-time model: t = overhead + prefill_compute + decode_hbm."""
+
+    def __init__(self, n_params: float = 8e9,
+                 kv_bytes_per_token: float = KV_BYTES_PER_TOKEN,
+                 chips: int = 8, peak_flops: float = 197e12,
+                 hbm_bw: float = 819e9, mfu: float = 0.45,
+                 overhead: float = 0.004):
+        self.n_params = n_params
+        self.kv_bytes = kv_bytes_per_token
+        self.chips = chips
+        self.flops = peak_flops * chips * mfu
+        self.bw = hbm_bw * chips * 0.7
+        self.overhead = overhead
+
+    def step_time(self, prefill_tokens: int, decode_ctxs: List[int]) -> float:
+        t = self.overhead
+        if prefill_tokens:
+            t += 2.0 * self.n_params * prefill_tokens / self.flops
+        if decode_ctxs:
+            weights = 2.0 * self.n_params / self.bw
+            kv = sum(decode_ctxs) * self.kv_bytes / self.bw
+            t += weights + kv
+        return t
+
+    @classmethod
+    def for_model(cls, name: str = "llama-8b", **kw):
+        presets = {
+            "llama-8b": dict(n_params=8e9,
+                             kv_bytes_per_token=KV_BYTES_PER_TOKEN, chips=8),
+            "qwen-14b": dict(n_params=14e9, kv_bytes_per_token=196608,
+                             chips=8),
+            "llama-70b": dict(n_params=70e9, kv_bytes_per_token=327680,
+                              chips=32),
+        }
+        d = presets[name]
+        d.update(kw)
+        return cls(**d)

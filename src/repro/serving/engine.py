@@ -1,18 +1,21 @@
 """Serving engine: continuous batching with chunked prefill, driven by a
-pluggable scheduler (Tempo or baselines) against a pluggable backend.
+pluggable scheduler (Tempo or baselines) against a pluggable ``Backend``
+(DESIGN.md §2).
 
-``SimBackend`` — roofline-derived step-time model of a TPU v5e serving
-replica (197 TFLOP/s, 819 GB/s HBM per chip): prefill time is compute-bound,
-decode time is weight+KV HBM-bound.  This is what reproduces the paper's
-figures at laptop scale.
+``SimBackend`` (backend.py) — roofline-derived step-time model of a TPU v5e
+serving replica (197 TFLOP/s, 819 GB/s HBM per chip): prefill time is
+compute-bound, decode time is weight+KV HBM-bound.  This is what reproduces
+the paper's figures at laptop scale.
 
-``JaxBackend`` (jax_backend.py) — a real tiny model decoding on CPU, proving
-the scheduler integrates with actual JAX execution.
+``PagedJaxBackend`` (jax_backend.py) — a real reduced model decoding on
+device against a paged KV cache addressed by this engine's ``BlockManager``
+block tables; the SAME run loop below drives it.
 
-The engine owns request lifecycle, KV block accounting (paged, 128-token
-pages), collective-DAG stage spawning, and SLO-tracker updates.  Time is the
-sum of backend step times plus arrival gaps — a discrete-event loop at
-engine-step granularity, faithful to iteration-level scheduling."""
+The engine owns request lifecycle, KV block accounting (paged; page size
+from the backend, default 128 tokens), collective-DAG stage spawning, and
+SLO-tracker updates.  Time is the sum of backend step times plus arrival
+gaps — a discrete-event loop at engine-step granularity, faithful to
+iteration-level scheduling."""
 
 from __future__ import annotations
 
@@ -21,48 +24,13 @@ import heapq
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.scheduler import EngineView, SchedulerBase
-from repro.serving.kvcache import BlockManager
+# SimBackend is re-exported here for backward compatibility — most callers
+# still import it from repro.serving.engine.
+from repro.serving.backend import Backend, SimBackend  # noqa: F401
+from repro.serving.kvcache import (BLOCK_TOKENS, KV_BYTES_PER_TOKEN,
+                                   BlockManager)
 from repro.serving.request import (CollectiveDag, ReqState, Request)
 from repro.serving.workload import WorkloadGen
-
-
-# ---------------------------------------------------------------------------
-class SimBackend:
-    """Step-time model: t = overhead + prefill_compute + decode_hbm."""
-
-    def __init__(self, n_params: float = 8e9, kv_bytes_per_token: float = 131072,
-                 chips: int = 8, peak_flops: float = 197e12,
-                 hbm_bw: float = 819e9, mfu: float = 0.45,
-                 overhead: float = 0.004):
-        self.n_params = n_params
-        self.kv_bytes = kv_bytes_per_token
-        self.chips = chips
-        self.flops = peak_flops * chips * mfu
-        self.bw = hbm_bw * chips * 0.7
-        self.overhead = overhead
-
-    def step_time(self, prefill_tokens: int, decode_ctxs: List[int]) -> float:
-        t = self.overhead
-        if prefill_tokens:
-            t += 2.0 * self.n_params * prefill_tokens / self.flops
-        if decode_ctxs:
-            weights = 2.0 * self.n_params / self.bw
-            kv = sum(decode_ctxs) * self.kv_bytes / self.bw
-            t += weights + kv
-        return t
-
-    @classmethod
-    def for_model(cls, name: str = "llama-8b", **kw):
-        presets = {
-            "llama-8b": dict(n_params=8e9, kv_bytes_per_token=131072, chips=8),
-            "qwen-14b": dict(n_params=14e9, kv_bytes_per_token=196608,
-                             chips=8),
-            "llama-70b": dict(n_params=70e9, kv_bytes_per_token=327680,
-                              chips=32),
-        }
-        d = presets[name]
-        d.update(kw)
-        return cls(**d)
 
 
 # ---------------------------------------------------------------------------
@@ -87,9 +55,14 @@ class ServeEngine:
         # coupling cluster replicas through one EngineConfig object.
         self.cfg = config if config is not None else EngineConfig()
         self.workload = workload
-        self.kv = BlockManager(self.cfg.kv_blocks,
-                               kv_bytes_per_token=getattr(
-                                   backend, "kv_bytes", 131072))
+        # Block geometry follows the backend when it manages a real device
+        # page pool (PagedJaxBackend); otherwise EngineConfig/defaults.
+        self.kv = BlockManager(
+            getattr(backend, "num_blocks", None) or self.cfg.kv_blocks,
+            block_tokens=getattr(backend, "block_tokens", None)
+            or BLOCK_TOKENS,
+            kv_bytes_per_token=getattr(backend, "kv_bytes",
+                                       KV_BYTES_PER_TOKEN))
         self.requests: Dict[int, Request] = {}
         self.dags: Dict[int, CollectiveDag] = {}
         self.finished: List[Request] = []
@@ -131,7 +104,9 @@ class ServeEngine:
             now=self.now, step=self.step, requests=self.requests,
             max_batch=self.cfg.max_batch,
             prefill_budget=self.cfg.prefill_budget,
-            kv_block_bytes=int(self.kv.kv_bytes_per_token * 128),
+            kv_block_bytes=int(self.kv.kv_bytes_per_token
+                               * self.kv.block_tokens),
+            block_tokens=self.kv.block_tokens,
             swap_bw=self.cfg.swap_bw,
             kv_free_frac=len(self.kv.free) / max(self.kv.num_blocks, 1),
             dag_remaining=self._dag_remaining)
@@ -283,10 +258,18 @@ class ServeEngine:
         for v in victims:
             if self.kv.can_fit(tokens_needed):
                 return True
-            moved = self.kv.swap_out(v.rid)
+            moved = self._swap_out(v.rid)
             self.swap_bytes += moved
             self._step_swap += moved
         return self.kv.can_fit(tokens_needed)
+
+    def _swap_out(self, rid: int) -> float:
+        """Swap one sequence's KV out, telling the backend FIRST (it must
+        copy the device pages before the blocks are recycled)."""
+        a = self.kv.seqs.get(rid)
+        if a is not None and not a.swapped:
+            self.backend.kv_swap_out(rid, self.kv.block_table(rid), a.tokens)
+        return self.kv.swap_out(rid)
 
     def _ensure_kv(self, rid: int, tokens: int, protect: set) -> bool:
         r = self.requests[rid]
@@ -298,6 +281,8 @@ class ServeEngine:
                     return False
                 cost = self.kv.swap_in(rid)
             self._step_swap += cost or 0.0
+            if not self.kv.seqs[rid].swapped:
+                self.backend.kv_swap_in(rid, self.kv.block_table(rid))
         if self.kv.ensure(rid, tokens):
             return True
         if not self._evict_for(tokens, protect):
@@ -318,7 +303,7 @@ class ServeEngine:
         if not victims:
             return
         v = max(victims, key=lambda r: (r.arrival, r.rid))
-        moved = self.kv.swap_out(v.rid)
+        moved = self._swap_out(v.rid)
         self.swap_bytes += moved
         self._step_swap += moved
         if v.state in (ReqState.RUNNING, ReqState.PREFILL):
@@ -329,6 +314,7 @@ class ServeEngine:
     def _execute(self, dec):
         self._step_swap = 0.0
         self._kv_blocked = False
+        self.backend.begin_step()
         # displaced requests: slot lost; KV stays resident until pressure
         for rid in dec.preempted:
             r = self.requests.get(rid)
@@ -343,15 +329,21 @@ class ServeEngine:
             r = self.requests.get(rid)
             if r is None or r.state == ReqState.FINISHED:
                 continue
+            chunk = min(chunk, r.prefill_remaining)
+            if chunk <= 0:
+                continue
             if not self._ensure_kv(rid, r.prefilled + chunk, protect):
                 self._kv_blocked = True
                 continue  # KV pressure: skip this chunk
-            r.prefilled = min(r.prompt_len, r.prefilled + chunk)
+            self.backend.prefill_chunk(r, r.prefilled, chunk,
+                                       self.kv.block_table(rid))
+            r.prefilled += chunk
             r.state = ReqState.PREFILL
             prefill_tokens += chunk
 
         decode_ctxs = []
         decoded_reqs = []
+        decode_tables = []
         for rid in dec.decode_ids:
             r = self.requests.get(rid)
             if r is None or r.state == ReqState.FINISHED or \
@@ -364,9 +356,12 @@ class ServeEngine:
             r.state = ReqState.RUNNING
             decode_ctxs.append(ctx)
             decoded_reqs.append(r)
+            decode_tables.append(self.kv.block_table(rid))
 
         if not prefill_tokens and not decode_ctxs and self._kv_blocked:
             self._force_evict()
+
+        self.backend.decode_batch(decoded_reqs, decode_tables)
 
         dt = self.backend.step_time(prefill_tokens, decode_ctxs)
         dt += self._step_swap / self.cfg.swap_bw
@@ -387,6 +382,7 @@ class ServeEngine:
                 r.state = ReqState.FINISHED
                 r.finish_t = self.now
                 self.kv.release(r.rid)
+                self.backend.kv_release(r.rid)
                 self.finished.append(r)
                 finished_now.append(r)
         for r in finished_now:

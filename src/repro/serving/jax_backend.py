@@ -1,13 +1,34 @@
-"""Real-execution serving loop: a (reduced) model actually decodes on device
-through the unified Model API, driven by any scheduler — proving Tempo
-integrates with genuine JAX execution, not only the simulator.
+"""PagedJaxBackend: real JAX execution behind the Backend protocol.
 
-Slots hold per-request KV caches (batch dim of the cache pytree); decode is
-vmapped over slots so every sequence advances at its own position.  Wall
-times feed the SLO tracker exactly like SimBackend's model does."""
+A reduced model genuinely prefills and decodes on device through the
+unified Model API (``prefill_paged`` / ``decode_paged``) against a single
+device-resident paged KV cache.  Block tables come from the engine's
+``BlockManager`` — the same allocator that models KV pressure for the
+simulator — so *one* run loop (``ServeEngine._execute``), every scheduler,
+eviction/swap, and the whole cluster stack work identically over simulated
+and real execution.
+
+Geometry: the device pool holds ``num_blocks`` pages of ``page`` tokens
+plus ONE scrap page (index ``num_blocks``) that absorbs the KV writes of
+padded batch/chunk rows; the scrap page never appears in a live block
+table, so padding can't corrupt resident sequences.  Chunks are padded to
+power-of-two buckets and decode batches to power-of-two widths to bound
+the number of XLA compiles (compile time lands in measured step time, like
+a real replica's cold start).
+
+Eviction fidelity: ``kv_swap_out`` copies the victim's pages to host
+before the engine recycles its blocks; ``kv_swap_in`` writes them back
+into the (new) blocks — so a preempted-and-resumed sequence decodes
+byte-identical continuations.
+
+Sampling is seeded temperature/top-k keyed per (rid, position) — token
+streams are reproducible under a fixed seed regardless of batch
+composition (greedy argmax at temperature 0).
+"""
 
 from __future__ import annotations
 
+import functools
 import time
 from typing import Dict, List, Optional
 
@@ -16,123 +37,167 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.archs import reduced_config
-from repro.core.scheduler import Decision, EngineView, SchedulerBase
 from repro.models.model import build_model
-from repro.serving.request import ReqState, Request
+from repro.serving.backend import Backend, Sampler
 
 
-class RealServeLoop:
-    def __init__(self, arch: str = "tinyllama-1.1b", slots: int = 4,
-                 max_len: int = 192, seed: int = 0):
+def _bucket(n: int, lo: int = 8) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class PagedJaxBackend(Backend):
+    def __init__(self, arch: str = "tinyllama-1.1b", num_blocks: int = 64,
+                 page: int = 16, max_len: int = 128, seed: int = 0,
+                 temperature: float = 0.0, top_k: int = 0,
+                 overhead: float = 1e-4, interpret: bool = True):
         self.cfg = reduced_config(arch)
         self.model = build_model(self.cfg)
+        if not self.model.supports_paged():
+            raise ValueError(
+                f"{arch}: paged serving needs a pure-attention stack with "
+                "rope/none positions (recurrent mixers have no paged state)")
         self.params = self.model.init(jax.random.PRNGKey(seed))
-        self.slots = slots
+        self.page = page
         self.max_len = max_len
-        # slot axis LEADS every cache leaf; inside the vmap each request sees
-        # its own B=1 cache pytree
-        one = self.model.cache_specs(1, max_len)
-        self.caches = jax.tree.map(
-            lambda s: jnp.zeros((slots,) + s.shape, s.dtype), one)
-        self.free = list(range(slots))
-        self.slot_of: Dict[int, int] = {}
+        self.n_max = -(-max_len // page)         # block-table width
+        self.scrap = num_blocks                  # pad rows write here
+        # +1: the scrap page lives at the end of the pool, outside the
+        # BlockManager's 0..num_blocks-1 range
+        self.pages = self.model.init_paged_caches(num_blocks + 1, page)
+        self.overhead = overhead
+        self.interpret = interpret
+        self.sampler = Sampler(temperature=temperature, top_k=top_k,
+                               seed=seed)
         self.generated: Dict[int, List[int]] = {}
-        self.positions = jnp.zeros((slots,), jnp.int32)
-        self.last_tok = jnp.zeros((slots, 1, 1), jnp.int32)
-        self._decode = jax.jit(jax.vmap(
-            self.model.decode_step, in_axes=(None, 0, 0, 0)))
-        self._prefill = jax.jit(self.model.prefill)
+        self._prompts: Dict[int, np.ndarray] = {}
+        self._host: Dict[int, object] = {}       # swapped-out page contents
+        self._seed = seed
+        self._t_acc = 0.0
+        self._prefill = jax.jit(self.model.prefill_paged)
+        self._decode = jax.jit(functools.partial(
+            self.model.decode_paged, interpret=interpret))
+
+        # engine-facing geometry (BlockManager mirrors the device pool)
+        self.block_tokens = page
+        self.num_blocks = num_blocks
+        self.kv_bytes = float(self.model.kv_bytes_per_token())
 
     # ------------------------------------------------------------------
-    def _write_slot(self, caches_one, slot: int):
-        self.caches = jax.tree.map(
-            lambda full, one: _set_slot(full, one, slot),
-            self.caches, caches_one)
+    def prompt_ids(self, req) -> np.ndarray:
+        """Prompt tokens: caller-supplied via req.meta['prompt_tokens'] or
+        synthesized deterministically from (seed, rid)."""
+        toks = self._prompts.get(req.rid)
+        if toks is None:
+            given = req.meta.get("prompt_tokens")
+            if given is not None:
+                toks = np.asarray(given, np.int32)
+                if toks.shape[0] != req.prompt_len:
+                    raise ValueError(
+                        f"r{req.rid}: prompt_tokens length {toks.shape[0]} "
+                        f"!= prompt_len {req.prompt_len}")
+            else:
+                rng = np.random.default_rng(
+                    (self._seed, req.rid & 0x7FFFFFFF))
+                toks = rng.integers(0, self.cfg.vocab_size,
+                                    size=req.prompt_len).astype(np.int32)
+            self._prompts[req.rid] = toks
+        return toks
 
-    def admit(self, req: Request, prompt: np.ndarray) -> bool:
-        if not self.free:
-            return False
-        slot = self.free.pop()
-        logits, c1 = self._prefill(
-            self.params, {"tokens": jnp.asarray(prompt, jnp.int32)[None, :]})
-        self._write_slot(c1, slot)
-        tok = int(jnp.argmax(logits[0]))
-        self.slot_of[req.rid] = slot
-        self.generated[req.rid] = [tok]
-        self.positions = self.positions.at[slot].set(len(prompt))
-        self.last_tok = self.last_tok.at[slot, 0, 0].set(tok)
-        return True
-
-    def release(self, rid: int):
-        slot = self.slot_of.pop(rid, None)
-        if slot is not None:
-            self.free.append(slot)
+    def _padded_table(self, table: List[int]) -> np.ndarray:
+        t = np.full(self.n_max, self.scrap, np.int32)
+        t[:len(table)] = table
+        return t
 
     # ------------------------------------------------------------------
-    def decode_step(self, rids: List[int]) -> float:
-        """One REAL decode step for all given rids (batched)."""
-        if not rids:
-            return 1e-4
+    # Backend protocol
+    # ------------------------------------------------------------------
+    def begin_step(self) -> None:
+        self._t_acc = 0.0
+
+    def prefill_chunk(self, req, start: int, n: int,
+                      block_table: List[int]) -> None:
+        if req.prompt_len + req.true_output_len > self.max_len:
+            raise ValueError(
+                f"r{req.rid}: {req.prompt_len}+{req.true_output_len} tokens "
+                f"exceed max_len={self.max_len}; raise max_len or cap the "
+                "workload (WorkloadSpec.prompt_cap/output_cap)")
+        prompt = self.prompt_ids(req)
+        C = _bucket(n)
+        toks = np.zeros(C, np.int32)
+        toks[:n] = prompt[start:start + n]
         t0 = time.perf_counter()
-        logits, self.caches = self._decode(self.params, self.caches,
-                                           self.last_tok, self.positions)
-        logits.block_until_ready()
-        for rid in rids:
-            slot = self.slot_of[rid]
-            tok = int(jnp.argmax(logits[slot, 0]))
-            self.generated[rid].append(tok)
-            self.last_tok = self.last_tok.at[slot, 0, 0].set(tok)
-            self.positions = self.positions.at[slot].add(1)
-        return time.perf_counter() - t0
+        self.pages = self._prefill(
+            self.params, self.pages, jnp.asarray(toks)[None, :],
+            jnp.int32(start), jnp.asarray(self._padded_table(block_table)),
+            jnp.int32(n))
+        jax.tree.leaves(self.pages)[0].block_until_ready()
+        self._t_acc += time.perf_counter() - t0
+        self.generated.setdefault(req.rid, [])
+
+    def decode_batch(self, reqs: List, tables: List[List[int]]) -> None:
+        """One real decode step for every request in the batch.
+
+        Convention: the input token is the request's last token (prompt
+        tail for the first step), written at position prompt_len-1+decoded;
+        re-writing the prompt tail's KV on the first step is idempotent, so
+        prefill needs no logits head and every emitted token flows through
+        this one path."""
+        if not reqs:
+            return
+        B = _bucket(len(reqs), lo=1)
+        toks = np.zeros((B, 1), np.int32)
+        pos = np.zeros(B, np.int32)
+        tabs = np.full((B, self.n_max), self.scrap, np.int32)
+        for i, r in enumerate(reqs):
+            gen = self.generated.setdefault(r.rid, [])
+            prompt = self.prompt_ids(r)
+            toks[i, 0] = gen[-1] if gen else prompt[-1]
+            pos[i] = r.prompt_len - 1 + r.decoded
+            tabs[i] = self._padded_table(tables[i])
+        t0 = time.perf_counter()
+        logits, self.pages = self._decode(
+            self.params, self.pages, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(tabs))
+        logits = np.asarray(logits)
+        self._t_acc += time.perf_counter() - t0
+        for i, r in enumerate(reqs):
+            tok = self.sampler.sample(logits[i], r.rid, int(pos[i]))
+            self.generated[r.rid].append(tok)
+
+    # -- KV residency hooks (mirror BlockManager transitions 1:1) -------
+    def _gather(self, leaf, table):
+        return leaf[:, table] if leaf.ndim == 5 else leaf[table]
+
+    def _scatter(self, leaf, table, saved):
+        saved = jnp.asarray(saved, leaf.dtype)
+        if leaf.ndim == 5:
+            return leaf.at[:, table].set(saved)
+        return leaf.at[table].set(saved)
+
+    def kv_swap_out(self, rid: int, block_table: List[int],
+                    tokens: int) -> None:
+        if not block_table:
+            return
+        table = np.asarray(block_table, np.int32)
+        self._host[rid] = jax.tree.map(
+            lambda p: np.asarray(self._gather(p, table)), self.pages)
+
+    def kv_swap_in(self, rid: int, block_table: List[int]) -> None:
+        saved = self._host.pop(rid, None)
+        if saved is None:
+            return
+        table = np.asarray(block_table, np.int32)
+        self.pages = jax.tree.map(
+            lambda p, s: self._scatter(p, table, s), self.pages, saved)
+
+    def kv_release(self, rid: int) -> None:
+        self._host.pop(rid, None)
+        self._prompts.pop(rid, None)
 
     # ------------------------------------------------------------------
-    def run(self, scheduler: SchedulerBase, requests: List[Request],
-            max_steps: int = 400) -> Dict[int, List[int]]:
-        """Serve a list of requests to completion with real decoding."""
-        rng = np.random.default_rng(0)
-        now, step = 0.0, 0
-        live = {r.rid: r for r in requests}
-        prompts = {r.rid: rng.integers(
-            0, self.cfg.vocab_size, size=min(r.prompt_len, 32)).astype(
-                np.int32) for r in requests}
-        view = lambda: EngineView(now=now, step=step, requests=live,
-                                  max_batch=self.slots, prefill_budget=10**6)
-        for r in requests:
-            scheduler.on_arrival(r, view())
-        while step < max_steps and any(not r.done for r in live.values()):
-            # admit into free slots in scheduler priority order
-            dec: Decision = scheduler.schedule(view())
-            for rid, _chunk in dec.prefill.items():
-                r = live[rid]
-                if r.rid not in self.slot_of and self.admit(r, prompts[rid]):
-                    r.prefilled = r.prompt_len
-                    r.first_token_t = now
-                    r.decoded += 1
-                    r.token_times.append(now)
-            rids = [rid for rid in dec.decode_ids if rid in self.slot_of
-                    and not live[rid].done]
-            dt = self.decode_step(rids)
-            now += dt
-            step += 1
-            for rid in rids:
-                r = live[rid]
-                r.decoded += 1
-                r.token_times.append(now)
-                if r.done:
-                    r.state = ReqState.FINISHED
-                    r.finish_t = now
-                    self.release(rid)
-                    scheduler.on_finish(r, view())
-            tr = getattr(scheduler, "tracker", None)
-            if tr is not None:
-                tr.on_step(dt, 0, len(rids))
-        return self.generated
-
-
-def _set_slot(full, one, slot: int):
-    """Write a B=1 cache leaf into slot `slot` of the slot-leading buffer,
-    zero-padding any shorter axis (e.g. prefill length < max_len)."""
-    pad = [(0, max(0, f - o)) for f, o in zip(full.shape[1:], one.shape)]
-    if any(p[1] for p in pad):
-        one = jnp.pad(one, pad)
-    return full.at[slot].set(one.astype(full.dtype))
+    def step_time(self, prefill_tokens: int,
+                  decode_ctxs: List[int]) -> float:
+        return self.overhead + self._t_acc

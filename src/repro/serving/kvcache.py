@@ -12,6 +12,18 @@ from typing import Dict, List, Optional
 
 BLOCK_TOKENS = 128
 
+# Default per-token KV footprint (llama-8b preset: 32 layers × 8 KV heads ×
+# 128 head_dim × 2 (K+V) × 2 B).  Shared with the scheduler's EngineView so
+# the preemption cost model and the BlockManager can never silently
+# disagree about block geometry.
+KV_BYTES_PER_TOKEN = 131072
+
+
+def block_bytes(kv_bytes_per_token: float = KV_BYTES_PER_TOKEN,
+                block_tokens: int = BLOCK_TOKENS) -> int:
+    """Bytes of KV per page — the one place block geometry is derived."""
+    return int(kv_bytes_per_token * block_tokens)
+
 
 @dataclasses.dataclass
 class SeqAlloc:
@@ -22,7 +34,7 @@ class SeqAlloc:
 
 class BlockManager:
     def __init__(self, num_blocks: int, block_tokens: int = BLOCK_TOKENS,
-                 kv_bytes_per_token: float = 128e3):
+                 kv_bytes_per_token: float = KV_BYTES_PER_TOKEN):
         self.num_blocks = num_blocks
         self.block_tokens = block_tokens
         self.kv_bytes_per_token = kv_bytes_per_token

@@ -1,6 +1,12 @@
 """One-call experiment runners: workload × scheduler × backend -> Summary
 (single replica) or workload × scheduler × router × fleet -> FleetSummary
-(cluster co-simulation)."""
+(cluster co-simulation).
+
+``backend`` selects the execution substrate (DESIGN.md §2): "sim" (the
+roofline step-time model, default), "jax" (real decoding on a paged device
+KV cache via ``PagedJaxBackend`` — size the workload with
+``WorkloadSpec.prompt_cap``/``output_cap`` so sequences fit the device
+pool), or any ``Backend`` instance."""
 
 from __future__ import annotations
 
@@ -9,22 +15,38 @@ from typing import Dict, List, Optional, Union
 
 from repro.core.baselines import make_scheduler
 from repro.core.service import ServiceModel
+from repro.serving.backend import Backend
 from repro.serving.engine import EngineConfig, ServeEngine, SimBackend
 from repro.serving.metrics import (FleetSummary, Summary, summarize,
                                    summarize_fleet)
 from repro.serving.workload import WorkloadGen, WorkloadSpec
 
 
+def make_backend(backend: Union[str, Backend, None],
+                 backend_kwargs: Optional[Dict] = None) -> Backend:
+    """Resolve the --backend axis: "sim" | "jax" | instance | None."""
+    if backend is None or backend == "sim":
+        kw = dict(backend_kwargs or {})
+        return SimBackend.for_model(kw.pop("name", "llama-8b"), **kw)
+    if backend == "jax":
+        from repro.serving.jax_backend import PagedJaxBackend
+        return PagedJaxBackend(**(backend_kwargs or {}))
+    if isinstance(backend, str):
+        raise ValueError(f"unknown backend {backend!r} (sim | jax)")
+    return backend
+
+
 def run_experiment(scheduler: str = "tempo",
                    spec: Optional[WorkloadSpec] = None,
                    engine_cfg: Optional[EngineConfig] = None,
-                   backend: Optional[SimBackend] = None,
+                   backend: Union[str, Backend, None] = None,
                    service: Optional[ServiceModel] = None,
                    warmup: int = 512,
-                   sched_kwargs: Optional[Dict] = None) -> Summary:
+                   sched_kwargs: Optional[Dict] = None,
+                   backend_kwargs: Optional[Dict] = None) -> Summary:
     spec = spec or WorkloadSpec()
     engine_cfg = engine_cfg or EngineConfig()
-    backend = backend or SimBackend.for_model("llama-8b")
+    backend = make_backend(backend, backend_kwargs)
     service = service or ServiceModel()
     sk = dict(sched_kwargs or {})
     if scheduler.startswith("tempo") and scheduler != "tempo-sjf":
@@ -57,7 +79,10 @@ def run_cluster_experiment(scheduler: str = "tempo",
                            warmup: int = 512,
                            sched_kwargs: Optional[Dict] = None,
                            autoscale: bool = False,
-                           autoscaler_cfg=None) -> FleetSummary:
+                           autoscaler_cfg=None,
+                           backend: Union[str, Backend, None] = None,
+                           backend_kwargs: Optional[Dict] = None
+                           ) -> FleetSummary:
     """Serve one workload across ``n_replicas`` co-simulated replicas.
 
     Mirrors ``run_experiment``: same workload/scheduler knobs, plus a router
@@ -73,8 +98,10 @@ def run_cluster_experiment(scheduler: str = "tempo",
     spec = spec or WorkloadSpec()
     engine_cfg = engine_cfg or EngineConfig()
     service = service or ServiceModel()
+    # every replica runs the SAME model: a fresh backend per replica (own
+    # device page pool / timers), built from the same backend spec
     backend_factory = backend_factory or (
-        lambda rid: SimBackend.for_model("llama-8b"))
+        lambda rid: make_backend(backend, backend_kwargs))
     base_sk = dict(sched_kwargs or {})
     if scheduler.startswith("tempo") and scheduler != "tempo-sjf":
         base_sk.setdefault("service", service)

@@ -60,6 +60,11 @@ class WorkloadSpec:
     slo_jitter: float = 0.3           # per-user SLO heterogeneity
     hint_noise: float = 0.8
     seed: int = 0
+    # caps (0 = uncapped): clamp drawn lengths so workloads fit a real
+    # backend's device KV pool (PagedJaxBackend.max_len); the RNG draw
+    # order is unchanged, only the resulting lengths are clipped
+    prompt_cap: int = 0
+    output_cap: int = 0
 
 
 class WorkloadGen:
@@ -77,6 +82,10 @@ class WorkloadGen:
         mo, _, p50o, _ = TABLE2[(key[0], key[1], "out")]
         li = int(_lognormal_from(mi, p50i, self.rng)[0])
         lo = int(_lognormal_from(mo, p50o, self.rng)[0])
+        if self.spec.prompt_cap:
+            li = min(li, self.spec.prompt_cap)
+        if self.spec.output_cap:
+            lo = min(lo, self.spec.output_cap)
         return max(li, 4), max(lo, 8)
 
     def _hint(self, out_len: int) -> float:

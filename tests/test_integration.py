@@ -15,17 +15,25 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
 def test_real_jax_serving_with_tempo():
+    """The unified run loop (ServeEngine) drives real JAX decoding on the
+    paged device KV cache under Tempo — RealServeLoop's old dead-end fork
+    is retired (DESIGN.md §2)."""
     from repro.core.scheduler import TempoScheduler
-    from repro.serving.jax_backend import RealServeLoop
+    from repro.serving.engine import EngineConfig, ServeEngine
+    from repro.serving.jax_backend import PagedJaxBackend
     from repro.serving.request import Request, SLOSpec
     reqs = [Request(rid=i + 1, app="chatbot", arrival=0.0, prompt_len=12,
                     true_output_len=8 + 2 * i,
-                    slo=SLOSpec("latency", ttft=5.0, tbt=1.0))
+                    slo=SLOSpec("latency", ttft=1e6, tbt=1e6))
             for i in range(3)]
-    loop = RealServeLoop("tinyllama-1.1b", slots=4, max_len=64)
-    gen = loop.run(TempoScheduler(use_predictor=False), reqs, max_steps=120)
+    be = PagedJaxBackend("tinyllama-1.1b", num_blocks=12, page=16,
+                         max_len=32, seed=0)
+    eng = ServeEngine(be, TempoScheduler(use_predictor=False),
+                      EngineConfig(max_batch=4, prefill_budget=32))
+    eng.load(reqs, [])
+    eng.run()
     assert all(r.done for r in reqs)
-    assert all(len(gen[r.rid]) >= r.true_output_len for r in reqs)
+    assert all(len(be.generated[r.rid]) == r.true_output_len for r in reqs)
 
 
 def test_serve_failover_drill():

@@ -6,7 +6,9 @@ import jax.numpy as jnp
 import pytest
 
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.paged_attention import paged_attention
+from repro.kernels.paged_attention import (paged_attention, paged_gather,
+                                           paged_kv_append,
+                                           paged_kv_append_batch)
 from repro.kernels.ref import flash_attention_ref, paged_attention_ref
 
 
@@ -45,9 +47,12 @@ def test_flash_attention_non_causal():
 
 
 @pytest.mark.parametrize("B,H,KV,D,nmax", [
-    (2, 4, 4, 64, 2),
-    (4, 8, 2, 64, 4),
-    (2, 8, 8, 128, 3),
+    (2, 4, 4, 64, 2),       # MHA (G=1)
+    (4, 8, 2, 64, 4),       # GQA G=4
+    (2, 8, 8, 128, 3),      # MHA wide head
+    (2, 4, 1, 64, 2),       # MQA (KV=1, G=4)
+    (1, 6, 3, 64, 3),       # GQA G=2, non-pow2 heads
+    (2, 16, 4, 16, 2),      # GQA G=4, small head_dim (reduced configs)
 ])
 @pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
 def test_paged_attention_sweep(B, H, KV, D, nmax, dt):
@@ -66,6 +71,64 @@ def test_paged_attention_sweep(B, H, KV, D, nmax, dt):
     err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
                                 - ref.astype(jnp.float32))))
     assert err < _tol(dt), err
+
+
+def test_paged_kv_append_chunk_roundtrip():
+    """Chunked-prefill append: scatter a sequence's KV in uneven chunks
+    (with padded rows routed to the scrap page), then (a) the gathered
+    table equals the contiguous original and (b) a paged decode read over
+    the appended cache matches the dense reference."""
+    page, P, KV, D, nmax = 16, 8, 2, 32, 3
+    ctx = 41                                    # 2 full pages + partial
+    rng = np.random.default_rng(3)
+    k_seq = jnp.asarray(rng.normal(size=(ctx, KV, D)), jnp.float32)
+    v_seq = jnp.asarray(rng.normal(size=(ctx, KV, D)), jnp.float32)
+    kp = jnp.zeros((P + 1, page, KV, D), jnp.float32)   # +1 scrap page
+    vp = jnp.zeros((P + 1, page, KV, D), jnp.float32)
+    table = jnp.asarray([5, 2, 7], jnp.int32)
+    start = 0
+    for chunk in (7, 16, 18):                   # uneven, page-crossing
+        pad = 32                                # static bucket > chunk
+        kc = jnp.zeros((pad, KV, D)).at[:chunk].set(
+            k_seq[start:start + chunk])
+        vc = jnp.zeros((pad, KV, D)).at[:chunk].set(
+            v_seq[start:start + chunk])
+        kp, vp = paged_kv_append(kp, vp, kc, vc, table, start,
+                                 n=jnp.int32(chunk))
+        start += chunk
+    assert start == ctx
+    got_k = paged_gather(kp, table)[:ctx]
+    assert float(jnp.max(jnp.abs(got_k - k_seq))) == 0.0
+    # scrap page (index P) absorbed every padded row; pages outside the
+    # table were never touched
+    untouched = [i for i in range(P) if i not in (5, 2, 7)]
+    assert float(jnp.max(jnp.abs(kp[jnp.asarray(untouched)]))) == 0.0
+    # decode read through the Pallas kernel over the appended cache
+    q = jnp.asarray(rng.normal(size=(1, 4, D)), jnp.float32)
+    out = paged_attention(q, kp, vp, table[None, :],
+                          jnp.asarray([ctx], jnp.int32), interpret=True)
+    ref = paged_attention_ref(q, kp, vp, table[None, :],
+                              jnp.asarray([ctx], jnp.int32))
+    assert float(jnp.max(jnp.abs(out - ref))) < 3e-5
+
+
+def test_paged_kv_append_batch_decode_positions():
+    """One-token-per-sequence append at distinct positions lands each entry
+    in the owner's page/slot and nowhere else."""
+    page, P, KV, D = 16, 6, 2, 32
+    rng = np.random.default_rng(4)
+    kp = jnp.zeros((P, page, KV, D), jnp.float32)
+    vp = jnp.zeros((P, page, KV, D), jnp.float32)
+    tables = jnp.asarray([[0, 1], [3, 2]], jnp.int32)
+    positions = jnp.asarray([17, 3], jnp.int32)   # page 1 slot 1, page 3 slot 3
+    k1 = jnp.asarray(rng.normal(size=(2, KV, D)), jnp.float32)
+    v1 = jnp.asarray(rng.normal(size=(2, KV, D)), jnp.float32)
+    kp, vp = paged_kv_append_batch(kp, vp, k1, v1, tables, positions)
+    assert float(jnp.max(jnp.abs(kp[1, 1] - k1[0]))) == 0.0
+    assert float(jnp.max(jnp.abs(kp[3, 3] - k1[1]))) == 0.0
+    total = float(jnp.sum(jnp.abs(kp))) + float(jnp.sum(jnp.abs(vp)))
+    written = float(jnp.sum(jnp.abs(k1))) + float(jnp.sum(jnp.abs(v1)))
+    assert abs(total - written) < 1e-4            # nothing else touched
 
 
 def test_paged_attention_edge_ctx():
