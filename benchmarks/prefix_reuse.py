@@ -1,0 +1,59 @@
+"""Prefix-reuse sweep: prefix cache on/off × multiturn/agentic workloads.
+
+Measures what shared-prefix KV reuse buys on the paper's latency-sensitive
+(multi-turn chat) and compound (agentic chain) traffic: goodput, prefill
+tokens actually computed, cache hit-rate, and the cached-token fraction.
+Rows persist to experiments/bench/prefix_reuse.json via benchmarks.run.
+
+  PYTHONPATH=src python -m benchmarks.run --only prefix_reuse [--full]
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.serving.engine import EngineConfig
+from repro.serving.run import run_experiment
+from repro.serving.workload import WorkloadSpec
+
+
+def _spec(scenario: str, quick: bool) -> WorkloadSpec:
+    if scenario == "multiturn":
+        return WorkloadSpec(scenario="multiturn",
+                            rate=1.0 if quick else 2.0,
+                            duration=120.0 if quick else 360.0, seed=0,
+                            system_prompt_len=256, shared_system_frac=0.5)
+    return WorkloadSpec(scenario="agentic",
+                        rate=0.4 if quick else 0.8,
+                        duration=80.0 if quick else 240.0, seed=0,
+                        system_prompt_len=256, shared_system_frac=0.5)
+
+
+def prefix_reuse(quick: bool = True) -> List[dict]:
+    rows = []
+    for scenario in ("multiturn", "agentic"):
+        spec = _spec(scenario, quick)
+        base = None
+        for cache in (False, True):
+            t0 = time.time()
+            s = run_experiment(
+                "tempo", spec=spec,
+                engine_cfg=EngineConfig(prefix_cache=cache))
+            row = s.row()
+            row.update(
+                scenario=scenario, prefix_cache=cache,
+                prefill_tokens=s.prefill_tokens,
+                cached_tokens=s.cached_tokens,
+                prefix_hit_rate=round(s.prefix_hit_rate, 4),
+                wall_s=round(time.time() - t0, 1))
+            if cache and base is not None:
+                row["prefill_saved_frac"] = round(
+                    1.0 - s.prefill_tokens / max(base, 1), 4)
+            else:
+                base = s.prefill_tokens
+            rows.append(row)
+    return rows
+
+
+ALL = {"prefix_reuse": prefix_reuse}

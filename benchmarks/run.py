@@ -60,9 +60,11 @@ def main() -> None:
     from benchmarks.common import save
     from benchmarks.cluster_sweep import ALL as CLUSTER
     from benchmarks.paper_figs import ALL
+    from benchmarks.prefix_reuse import ALL as PREFIX
 
     benches = dict(ALL)
     benches.update(CLUSTER)
+    benches.update(PREFIX)
     benches["kernels"] = lambda quick=True: _kernel_bench()
     names = [n for n in benches if (not args.only or args.only in n)]
 

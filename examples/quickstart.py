@@ -30,24 +30,49 @@ from repro.serving.workload import WorkloadSpec              # noqa: E402
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", choices=("sim", "jax"), default="sim")
+    ap.add_argument("--scenario", choices=("mixed", "multiturn", "agentic"),
+                    default="mixed",
+                    help="mixed SLO traffic, or the prefix-reuse workloads "
+                    "(multi-turn chat / agentic chains)")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=True,
+                    help="shared-prefix KV reuse (default on)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false")
     args = ap.parse_args()
 
     if args.backend == "jax":
         # real decoding: capped lengths so sequences fit the device pool
-        spec = WorkloadSpec(rate=1.5, duration=6.0, seed=0, mix=(2, 1, 1),
-                            prompt_cap=40, output_cap=12, slo_scale=20.0)
-        engine_cfg = EngineConfig(max_batch=8, prefill_budget=32)
-        backend_kwargs = dict(arch="tinyllama-1.1b", num_blocks=48,
-                              page=16, max_len=64, seed=0)
+        if args.scenario == "mixed":
+            spec = WorkloadSpec(rate=1.5, duration=6.0, seed=0,
+                                mix=(2, 1, 1), prompt_cap=40, output_cap=12,
+                                slo_scale=20.0)
+        else:
+            # per-segment caps keep accumulated histories in the pool
+            spec = WorkloadSpec(scenario=args.scenario, rate=0.5,
+                                duration=8.0, seed=0, turns=(2, 3),
+                                think_time=40.0, system_prompt_len=8,
+                                shared_system_frac=1.0, prompt_cap=8,
+                                output_cap=4, slo_scale=50.0)
+        engine_cfg = EngineConfig(max_batch=8, prefill_budget=32,
+                                  prefix_cache=args.prefix_cache)
+        backend_kwargs = dict(arch="tinyllama-1.1b", num_blocks=64,
+                              page=16, max_len=128, seed=0)
         schedulers = ("vllm", "tempo")
     else:
-        spec = WorkloadSpec(rate=8.0, duration=90.0, seed=0)
-        engine_cfg = None
+        if args.scenario == "mixed":
+            spec = WorkloadSpec(rate=8.0, duration=90.0, seed=0)
+        else:
+            spec = WorkloadSpec(scenario=args.scenario, rate=2.0,
+                                duration=90.0, seed=0,
+                                system_prompt_len=256,
+                                shared_system_frac=0.5)
+        engine_cfg = EngineConfig(prefix_cache=args.prefix_cache)
         backend_kwargs = None
         schedulers = ("vllm", "sarathi", "tempo")
 
     print(f"{'scheduler':<16} {'gain':>12} {'goodput':>9} {'tok/s':>9} "
-          f"{'lat met':>8} {'thr met':>8} {'coll met':>9}")
+          f"{'lat met':>8} {'thr met':>8} {'coll met':>9} {'cached':>7}")
     for name in schedulers:
         s = run_experiment(name, spec=spec, engine_cfg=engine_cfg,
                            backend=args.backend,
@@ -56,14 +81,19 @@ def main() -> None:
         get = lambda k: pt.get(k, {}).get("slo_met", float("nan"))
         print(f"{name:<16} {s.service_gain:>12.0f} {s.goodput_frac:>9.3f} "
               f"{s.throughput_tok_s:>9.0f} {get('latency'):>8.2f} "
-              f"{get('throughput'):>8.2f} {get('collective'):>9.2f}")
+              f"{get('throughput'):>8.2f} {get('collective'):>9.2f} "
+              f"{s.cached_frac:>7.2f}")
         assert s.n_finished > 0 and s.goodput_frac > 0.0, \
             f"{name}@{args.backend}: no goodput"
+        if args.scenario != "mixed" and args.prefix_cache:
+            assert s.prefix_hits > 0, \
+                f"{name}@{args.backend}: prefix cache never hit"
 
     if args.backend == "jax":
         print("\nReal JAX execution behind the Backend protocol: the same "
-              "run loop, schedulers, KV accounting, and eviction drive an "
-              "actual model decoding on a paged device KV cache.")
+              "run loop, schedulers, KV accounting, eviction — and "
+              "prefix-cache COW sharing — drive an actual model decoding "
+              "on a paged device KV cache.")
     else:
         print("\nTempo allocates just-enough bandwidth per SLO (paced "
               "streaming, deadline-pressure density, stage-budgeted DAGs) "

@@ -4,12 +4,14 @@ replicas, and goodput-driven autoscaling on top of ``ServeEngine``."""
 from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
 from repro.cluster.engine import ClusterEngine, Replica
 from repro.cluster.router import (JoinShortestQueueRouter,
-                                  LeastKVPressureRouter, ROUTERS,
+                                  LeastKVPressureRouter,
+                                  PrefixAffinityRouter, ROUTERS,
                                   RoundRobinRouter, Router, SLOMarginRouter,
                                   make_router)
 
 __all__ = [
     "Autoscaler", "AutoscalerConfig", "ClusterEngine", "Replica",
     "Router", "RoundRobinRouter", "JoinShortestQueueRouter",
-    "LeastKVPressureRouter", "SLOMarginRouter", "ROUTERS", "make_router",
+    "LeastKVPressureRouter", "SLOMarginRouter", "PrefixAffinityRouter",
+    "ROUTERS", "make_router",
 ]

@@ -52,8 +52,9 @@ class Replica:
         return q
 
     def kv_used_frac(self) -> float:
-        kv = self.engine.kv
-        return 1.0 - len(kv.free) / max(kv.num_blocks, 1)
+        """KV pressure with reclaimable (cold-cached) blocks counted as
+        free — a replica full of cold cache is NOT under pressure."""
+        return 1.0 - self.engine.kv.available_frac
 
 
 class ClusterEngine:

@@ -20,6 +20,12 @@ Policies (JITServe's grouped margin-goodput idea lifted to fleet level):
                  live deadline work.  Dispatch where the margin degrades
                  least.  Uses each replica's own SLOTracker speed profile,
                  so slow/hot replicas organically shed load.
+  prefix-affinity — slo-margin plus session stickiness: a session's
+                 follow-up turns go to the replica whose prefix cache
+                 holds their history, unless that replica's backlog costs
+                 more than the re-prefill the affinity saves.  (DAGs are
+                 dispatched atomically by every policy, so agentic-chain
+                 affinity is structural and needs no map.)
 """
 
 from __future__ import annotations
@@ -245,11 +251,68 @@ class SLOMarginRouter(Router):
         return best
 
 
+# ---------------------------------------------------------------------------
+class PrefixAffinityRouter(SLOMarginRouter):
+    """Session follow-ups go to the replica that holds their KV prefix.
+
+    Stickiness is load-balanced against the slo-margin backlog signal with
+    hysteresis: the home replica keeps the session unless its expected
+    wait exceeds ``stick_ratio`` × the lightest replica's plus the prefill
+    time the cached prefix could possibly save (an upper bound — the whole
+    prompt) and a small floor — ordinary load jitter never thrashes a
+    session between caches, genuine hot-spotting sheds it.  First-turn
+    (and identity-less) traffic routes exactly like slo-margin, which also
+    seeds the affinity map."""
+
+    name = "prefix-affinity"
+
+    def __init__(self, service: Optional[ServiceModel] = None,
+                 min_stick_s: float = 2.0, stick_ratio: float = 2.0,
+                 max_sessions: int = 65536, **kw):
+        # min_stick_s is deliberately coarse: a session streams for tens
+        # of seconds, so backlog gaps shorter-lived than that are noise —
+        # chasing them would synchronise migration waves (herding), the
+        # exact failure mode the slo-margin backlog signal exists to avoid
+        super().__init__(service=service, **kw)
+        self.min_stick_s = min_stick_s
+        self.stick_ratio = stick_ratio
+        self.max_sessions = max_sessions
+        self._home: Dict[int, int] = {}        # session_id -> replica rid
+
+    def _remember(self, sid: int, rid: int) -> None:
+        # bounded map: sessions end silently, so evict oldest-remembered
+        # entries (insertion order) rather than growing forever
+        if sid not in self._home and len(self._home) >= self.max_sessions:
+            del self._home[next(iter(self._home))]
+        self._home[sid] = rid
+
+    def route(self, kind: str, obj, replicas: List, now: float):
+        sid = obj.session_id if kind == "r" else None
+        if sid is None:
+            return super().route(kind, obj, replicas, now)
+        by_rid = {rep.rid: rep for rep in replicas}
+        home = by_rid.get(self._home.get(sid, -1))
+        if home is None:                       # first turn / home drained
+            rep = super().route(kind, obj, replicas, now)
+            self._remember(sid, rep.rid)
+            return rep
+        waits = {rep.rid: self._backlog(rep, self._tracker(rep))[0]
+                 for rep in replicas}
+        lightest = min(replicas, key=lambda rp: (waits[rp.rid], rp.rid))
+        saved = self._tracker(home).est_prefill_time(obj.prompt_len)
+        if waits[home.rid] > self.stick_ratio * waits[lightest.rid] \
+                + max(saved, self.min_stick_s):
+            self._remember(sid, lightest.rid)  # cache cheaper to rebuild
+            return lightest
+        return home
+
+
 ROUTERS = {
     "round-robin": RoundRobinRouter,
     "jsq": JoinShortestQueueRouter,
     "least-kv": LeastKVPressureRouter,
     "slo-margin": SLOMarginRouter,
+    "prefix-affinity": PrefixAffinityRouter,
 }
 
 

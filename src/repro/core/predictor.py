@@ -52,6 +52,8 @@ class LengthPredictor:
         self._X: List[np.ndarray] = []
         self._y: List[float] = []
         self.fitted = False
+        self.fits = 0                    # completed (re)fits
+        self._since_fit = 0              # samples observed since last fit
         self.pred_ms: List[float] = []   # measured latency (fig 5a)
 
     # ------------------------------------------------------------------
@@ -63,6 +65,17 @@ class LengthPredictor:
         for g in {0, L // 4, L // 2, (3 * L) // 4}:
             self._X.append(request_features(req, g))
             self._y.append(float(L))
+            self._since_fit += 1
+
+    def maybe_fit(self, every: int = 2048) -> bool:
+        """Refit once `every` samples accumulated since the last fit.
+        Callers must NOT gate on ``len(_y) % N == 0``: observe() appends
+        1-4 samples per request, so the modulus is routinely stepped over
+        and the forest would never refit after warm start."""
+        if self._since_fit >= every:
+            self.fit()
+            return True
+        return False
 
     def fit(self):
         if len(self._y) >= 64:
@@ -71,6 +84,8 @@ class LengthPredictor:
             y = np.array(self._y[-6000:])
             self.forest.fit(X, y)
             self.fitted = True
+            self.fits += 1
+        self._since_fit = 0
 
     def warm_start(self, reqs: List[Request]):
         for r in reqs:

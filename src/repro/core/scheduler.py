@@ -127,8 +127,11 @@ class TempoScheduler(SchedulerBase):
         self._dirty = True
         if self.use_predictor and not self.precise:
             self.predictor.observe(req)
-            if len(self.predictor._y) % 2048 == 0:
-                self.predictor.fit()
+            # samples-since-last-fit counter, NOT a modulus on len(_y):
+            # observe() appends 1-4 samples per request, so a modulus is
+            # routinely stepped over and the QRF would never refit after
+            # warm start (stale-predictor bug)
+            self.predictor.maybe_fit()
 
     def refine(self, req: Request, view: EngineView):
         """Online refinement as generation progresses (§4.1)."""
@@ -157,9 +160,11 @@ class TempoScheduler(SchedulerBase):
 
         if req.slo.kind == "latency":
             if req.first_token_t is None:
-                # TTFT urgency ramps as the deadline approaches
+                # TTFT urgency ramps as the deadline approaches; the need
+                # is the UNCACHED prefill only — a prefix-cache hit is
+                # precise information at admit time that collapses it
                 slack = (req.arrival + req.slo.ttft) - now
-                need = self.tracker.est_prefill_time(req.prefill_remaining)
+                need = self.tracker.est_first_token_time(req)
                 urgency = 2.0 if slack < 2.0 * need else 0.5
                 return urgency * gain / max(remain, 1e-3)
             # per-token pacing is handled in schedule(); density here only

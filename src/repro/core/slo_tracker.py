@@ -48,8 +48,16 @@ class SLOTracker:
     def est_decode_time(self, tokens: float) -> float:
         return tokens * self.profile.decode_step
 
+    def est_first_token_time(self, req: Request) -> float:
+        """Time-to-first-token if scheduled now.  Keyed off
+        ``prefill_remaining``, which counts only the UNCACHED suffix — a
+        prefix-cache hit at admit shrinks TTFT urgency (and preemption
+        cost) exactly as it shrinks the real prefill."""
+        return self.est_prefill_time(req.prefill_remaining)
+
     def est_remaining_time(self, req: Request, est_total_out: float) -> float:
-        """Remaining service time if scheduled continuously from now."""
+        """Remaining service time if scheduled continuously from now.
+        Prefill is the uncached suffix only (see est_first_token_time)."""
         rem_out = max(est_total_out - req.decoded, 1.0)
         return self.est_prefill_time(req.prefill_remaining) \
             + self.est_decode_time(rem_out)

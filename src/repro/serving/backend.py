@@ -21,7 +21,9 @@ backend can mirror block residency 1:1:
   decode_batch(reqs, tables)        — one token for every listed request
   kv_swap_out(rid, table, tokens)   — blocks about to be freed (host copy)
   kv_swap_in(rid, table)            — blocks reallocated; restore contents
+  kv_copy_page(src, dst)            — COW fork: duplicate page src -> dst
   kv_release(rid)                   — request finished; drop state
+  output_tokens(rid)                — generated tokens (None if simulated)
   step_time(prefill_tokens, ctxs)   — the step's duration (model or wall)
 
 Backends may advertise ``block_tokens`` / ``num_blocks`` so the engine
@@ -64,8 +66,20 @@ class Backend:
     def kv_swap_in(self, rid: int, block_table: List[int]) -> None:
         pass
 
+    def kv_copy_page(self, src: int, dst: int) -> None:
+        """Copy-on-write fork: duplicate device page src into dst before
+        the engine appends into a previously shared page."""
+        pass
+
     def kv_release(self, rid: int) -> None:
         pass
+
+    def output_tokens(self, rid: int) -> Optional[List[int]]:
+        """Tokens actually generated for rid, if the backend knows them —
+        the engine registers prompt+output pages into the prefix cache
+        from real content when available (simulated backends return None
+        and the workload's synthetic output tokens are used instead)."""
+        return None
 
     def step_time(self, prefill_tokens: int,
                   decode_ctxs: List[int]) -> float:
@@ -100,7 +114,13 @@ class Sampler:
 
 # ---------------------------------------------------------------------------
 class SimBackend(Backend):
-    """Step-time model: t = overhead + prefill_compute + decode_hbm."""
+    """Step-time model: t = overhead + prefill_compute + decode_hbm.
+
+    Prefix-cache pricing is inherited from the engine: ``prefill_tokens``
+    is the sum of chunks actually computed (cache hits shrink it), while
+    ``decode_ctxs`` carry the FULL context length — cached KV is skipped
+    at prefill but still read on every decode step, exactly like a real
+    replica."""
 
     def __init__(self, n_params: float = 8e9,
                  kv_bytes_per_token: float = KV_BYTES_PER_TOKEN,

@@ -23,6 +23,8 @@ import dataclasses
 import heapq
 from typing import Callable, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.scheduler import EngineView, SchedulerBase
 # SimBackend is re-exported here for backward compatibility — most callers
 # still import it from repro.serving.engine.
@@ -42,6 +44,10 @@ class EngineConfig:
     swap_bw: float = 60e9
     max_steps: int = 2_000_000
     fail_at: Optional[float] = None   # fault-tolerance drill (serve.py)
+    # shared-prefix KV reuse (DESIGN.md §6).  Safe to leave on: requests
+    # without meta['prompt_tokens'] have no prefix identity and bypass the
+    # cache entirely, so legacy workloads are bit-for-bit unchanged.
+    prefix_cache: bool = True
 
 
 class ServeEngine:
@@ -71,6 +77,12 @@ class ServeEngine:
         self.step_log: List[Tuple[float, int, int]] = []
         self.preempt_count = 0
         self.swap_bytes = 0.0
+        # prefix-cache accounting (Summary.prefix_* / cached_frac)
+        self.prefix_lookups = 0       # requests with a prefix identity
+        self.prefix_hits = 0          # ... that matched cached pages
+        self.cached_tokens = 0        # prompt tokens served from cache
+        self.prefill_computed = 0     # prompt tokens actually computed
+        self.cow_forks = 0            # shared pages forked before append
         self._pending: List[Tuple[float, int, object]] = []
         self._seq = 0
 
@@ -96,8 +108,67 @@ class ServeEngine:
 
     def _admit(self, req: Request):
         self.requests[req.rid] = req
+        if self.cfg.prefix_cache:
+            self._prefix_lookup(req)
         view = self._view()
         self.sched.on_arrival(req, view)
+
+    # ------------------------------------------------------------------
+    # Shared-prefix KV reuse (DESIGN.md §6)
+    # ------------------------------------------------------------------
+    def _prefix_lookup(self, req: Request) -> None:
+        """Longest-cached-prefix lookup at admit: adopt the hit pages and
+        charge prefill only for the uncached suffix.  The match is capped
+        at prompt_len-1 so every request computes ≥1 suffix token — its
+        first write lands behind a COW fork, never inside a shared page."""
+        toks = req.meta.get("prompt_tokens")
+        if toks is None or req.rid in self.kv.seqs:
+            return
+        self.prefix_lookups += 1
+        blocks, cached = self.kv.match(toks, max_tokens=req.prompt_len - 1)
+        if cached <= 0:
+            return
+        self.kv.adopt(req.rid, blocks, cached)
+        req.cached_len = cached
+        req.prefilled = cached
+        self.prefix_hits += 1
+        self.cached_tokens += cached
+
+    def _prefix_register(self, req: Request) -> None:
+        """Publish a finished request's pages into the prefix index.  The
+        registered content is prompt + generated output MINUS the final
+        sampled token — its KV slot is never written (the step that would
+        write it never runs), so it must not be claimed as cached."""
+        toks = req.meta.get("prompt_tokens")
+        if toks is None:
+            return
+        out = self.backend.output_tokens(req.rid)
+        if out is None:
+            out = req.meta.get("output_tokens")
+        ctx = np.asarray(toks, np.int64)
+        if out is not None and len(out) > 0:
+            ctx = np.concatenate([ctx, np.asarray(out, np.int64)])
+        n_written = req.prompt_len + req.decoded - 1
+        # the prompt boundary is registered as an extra tail: real-backend
+        # followers extend the PROMPT, not the (unknowable) generated text
+        self.kv.register(req.rid, ctx[:n_written],
+                         boundaries=(req.prompt_len,))
+
+    def _cow_fork(self, rid: int, pos: int, protect: set) -> bool:
+        """Make the page holding `pos` privately writable (copy-on-write),
+        evicting for a fresh block if the pool is exhausted."""
+        res = self.kv.fork_for_append(rid, pos)
+        if res is None:
+            if not self._evict_for(self.kv.block_tokens, protect):
+                return False
+            res = self.kv.fork_for_append(rid, pos)
+            if res is None:
+                return False
+        old, new = res
+        if old != new:
+            self.backend.kv_copy_page(old, new)
+            self.cow_forks += 1
+        return True
 
     def _view(self) -> EngineView:
         return EngineView(
@@ -108,7 +179,7 @@ class ServeEngine:
                                * self.kv.block_tokens),
             block_tokens=self.kv.block_tokens,
             swap_bw=self.cfg.swap_bw,
-            kv_free_frac=len(self.kv.free) / max(self.kv.num_blocks, 1),
+            kv_free_frac=self.kv.available_frac,
             dag_remaining=self._dag_remaining)
 
     def _dag_remaining(self, rid: int) -> float:
@@ -335,11 +406,18 @@ class ServeEngine:
             if not self._ensure_kv(rid, r.prefilled + chunk, protect):
                 self._kv_blocked = True
                 continue  # KV pressure: skip this chunk
+            # the chunk's first page may be a shared cached page (a
+            # partially-filled tail adopted at admit): fork it before
+            # writing so sharers and the index never see a mutation
+            if not self._cow_fork(rid, r.prefilled, protect):
+                self._kv_blocked = True
+                continue
             self.backend.prefill_chunk(r, r.prefilled, chunk,
                                        self.kv.block_table(rid))
             r.prefilled += chunk
             r.state = ReqState.PREFILL
             prefill_tokens += chunk
+            self.prefill_computed += chunk
 
         decode_ctxs = []
         decoded_reqs = []
@@ -381,6 +459,8 @@ class ServeEngine:
             if r.done:
                 r.state = ReqState.FINISHED
                 r.finish_t = self.now
+                if self.cfg.prefix_cache:
+                    self._prefix_register(r)
                 self.kv.release(r.rid)
                 self.backend.kv_release(r.rid)
                 self.finished.append(r)

@@ -98,6 +98,10 @@ class PagedJaxBackend(Backend):
                     raise ValueError(
                         f"r{req.rid}: prompt_tokens length {toks.shape[0]} "
                         f"!= prompt_len {req.prompt_len}")
+                if toks.size and int(toks.max()) >= self.cfg.vocab_size:
+                    raise ValueError(
+                        f"r{req.rid}: prompt token {int(toks.max())} out of "
+                        f"vocab (vocab_size={self.cfg.vocab_size})")
             else:
                 rng = np.random.default_rng(
                     (self._seed, req.rid & 0x7FFFFFFF))
@@ -193,9 +197,23 @@ class PagedJaxBackend(Backend):
         self.pages = jax.tree.map(
             lambda p, s: self._scatter(p, table, s), self.pages, saved)
 
+    def kv_copy_page(self, src: int, dst: int) -> None:
+        """COW fork: duplicate device page src into dst (the engine is
+        about to append into a previously shared page).  Byte-exact copy,
+        so forked continuations equal their cache-off counterparts."""
+        self.pages = jax.tree.map(
+            lambda p: (p.at[:, dst].set(p[:, src]) if p.ndim == 5
+                       else p.at[dst].set(p[src])), self.pages)
+
     def kv_release(self, rid: int) -> None:
         self._host.pop(rid, None)
         self._prompts.pop(rid, None)
+
+    def output_tokens(self, rid: int) -> Optional[List[int]]:
+        """Real generated tokens — the engine registers prompt+output
+        pages into the prefix cache under their TRUE content hash (the
+        workload's synthetic output tokens would mis-describe real KV)."""
+        return self.generated.get(rid)
 
     # ------------------------------------------------------------------
     def step_time(self, prefill_tokens: int,

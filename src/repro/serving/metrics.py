@@ -33,6 +33,22 @@ class Summary:
     per_type: Dict[str, Dict[str, float]]
     gain_timeline: List[float]      # per-bucket service gain
     preemptions: int = 0
+    # prefix-cache accounting (engine counters; zeros when cache off or no
+    # request carried a prefix identity)
+    prefill_tokens: int = 0         # prompt tokens actually computed
+    cached_tokens: int = 0          # prompt tokens served from cache
+    prefix_hits: int = 0
+    prefix_lookups: int = 0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hits / max(self.prefix_lookups, 1)
+
+    @property
+    def cached_frac(self) -> float:
+        """Fraction of prompt tokens that came from the prefix cache."""
+        return self.cached_tokens \
+            / max(self.cached_tokens + self.prefill_tokens, 1)
 
     def row(self) -> Dict[str, float]:
         return dict(scheduler=self.scheduler, n=self.n_finished,
@@ -41,12 +57,16 @@ class Summary:
                     goodput_rps=round(self.goodput_rps, 3),
                     goodput_frac=round(self.goodput_frac, 4),
                     tok_s=round(self.throughput_tok_s, 1),
-                    makespan=round(self.makespan, 1))
+                    makespan=round(self.makespan, 1),
+                    cached_frac=round(self.cached_frac, 4),
+                    prefix_hit_rate=round(self.prefix_hit_rate, 4))
 
 
 def summarize(name: str, finished: List[Request], service: ServiceModel,
               makespan: float, bucket: float = 60.0,
-              preemptions: int = 0) -> Summary:
+              preemptions: int = 0,
+              prefill_tokens: int = 0, cached_tokens: int = 0,
+              prefix_hits: int = 0, prefix_lookups: int = 0) -> Summary:
     gain = sum(service.realized_gain(r) for r in finished)
     maxg = sum(service.max_gain(r) for r in finished)
     met = [r for r in finished if service.slo_met(r)]
@@ -81,7 +101,9 @@ def summarize(name: str, finished: List[Request], service: ServiceModel,
         max_gain=maxg, goodput_rps=len(met) / mk,
         goodput_frac=len(met) / max(len(finished), 1),
         throughput_tok_s=toks / mk, makespan=mk, per_type=per_type,
-        gain_timeline=timeline, preemptions=preemptions)
+        gain_timeline=timeline, preemptions=preemptions,
+        prefill_tokens=prefill_tokens, cached_tokens=cached_tokens,
+        prefix_hits=prefix_hits, prefix_lookups=prefix_lookups)
 
 
 # ---------------------------------------------------------------------------
@@ -118,16 +140,28 @@ def summarize_fleet(router: str, scheduler: str,
                         List[Tuple[float, int]]] = None,
                     routed: Optional[Dict[int, int]] = None,
                     preemptions: int = 0,
-                    preempt_by_replica: Optional[Dict[int, int]] = None
+                    preempt_by_replica: Optional[Dict[int, int]] = None,
+                    prefix_by_replica: Optional[
+                        Dict[int, Tuple[int, int, int, int]]] = None
                     ) -> FleetSummary:
     all_fin: List[Request] = [r for fin in finished_by_replica.values()
                               for r in fin]
+    # per-replica (prefill_tokens, cached_tokens, hits, lookups) sums to
+    # the fleet-wide prefix-cache stats
+    pfx = prefix_by_replica or {}
+    tot = [sum(v[i] for v in pfx.values()) for i in range(4)] \
+        if pfx else [0, 0, 0, 0]
     fleet = summarize(f"{scheduler}@{router}", all_fin, service, makespan,
-                      preemptions=preemptions)
+                      preemptions=preemptions,
+                      prefill_tokens=tot[0], cached_tokens=tot[1],
+                      prefix_hits=tot[2], prefix_lookups=tot[3])
     pbr = preempt_by_replica or {}
     per_replica = {
         rid: summarize(f"{scheduler}@{router}/r{rid}", fin, service,
-                       makespan, preemptions=pbr.get(rid, 0))
+                       makespan, preemptions=pbr.get(rid, 0),
+                       **dict(zip(("prefill_tokens", "cached_tokens",
+                                   "prefix_hits", "prefix_lookups"),
+                                  pfx.get(rid, (0, 0, 0, 0)))))
         for rid, fin in finished_by_replica.items()}
     return FleetSummary(
         router=router, fleet=fleet, per_replica=per_replica,

@@ -45,9 +45,18 @@ class Request:
     # collective linkage
     dag_id: Optional[int] = None
     stage: int = 0
+    # prefix identity: requests in one session (multi-turn chat) or one
+    # agentic chain share a token-stream prefix; meta['prompt_tokens']
+    # carries the actual tokens the hash chain (and the jax backend) use
+    session_id: Optional[int] = None
     # --- runtime state (engine-owned) ---
     state: ReqState = ReqState.WAITING
-    prefilled: int = 0             # prompt tokens processed
+    cached_len: int = 0            # prompt tokens served from prefix cache
+    prefilled: int = 0             # prompt tokens processed (admit sets it
+                                   # to cached_len so prefill_remaining —
+                                   # and every density/urgency/remaining-
+                                   # time estimate — counts only the
+                                   # uncached suffix)
     decoded: int = 0               # output tokens emitted
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None

@@ -65,7 +65,11 @@ def run_experiment(scheduler: str = "tempo",
     finished = eng.run()
     return summarize(sched.name if hasattr(sched, "name") else scheduler,
                      finished, service, eng.now,
-                     preemptions=eng.preempt_count)
+                     preemptions=eng.preempt_count,
+                     prefill_tokens=eng.prefill_computed,
+                     cached_tokens=eng.cached_tokens,
+                     prefix_hits=eng.prefix_hits,
+                     prefix_lookups=eng.prefix_lookups)
 
 
 # ---------------------------------------------------------------------------
@@ -125,7 +129,8 @@ def run_cluster_experiment(scheduler: str = "tempo",
 
     if isinstance(router, str):
         # a caller-supplied router INSTANCE keeps its own ServiceModel
-        kw = {"service": service} if router == "slo-margin" else {}
+        kw = {"service": service} \
+            if router in ("slo-margin", "prefix-affinity") else {}
         rt = make_router(router, **kw)
     else:
         rt = router
@@ -141,4 +146,10 @@ def run_cluster_experiment(scheduler: str = "tempo",
                            preemptions=cluster.preempt_count,
                            preempt_by_replica={
                                rep.rid: rep.engine.preempt_count
+                               for rep in cluster.replicas},
+                           prefix_by_replica={
+                               rep.rid: (rep.engine.prefill_computed,
+                                         rep.engine.cached_tokens,
+                                         rep.engine.prefix_hits,
+                                         rep.engine.prefix_lookups)
                                for rep in cluster.replicas})

@@ -12,6 +12,23 @@ Each request carries ``meta['hint']`` — a noisy function of the true output
 length standing in for whatever semantic signal a prompt encoder could
 extract.  The noise level is chosen so point prediction stays hard (fig. 2b)
 while upper bounds remain learnable (fig. 5b).
+
+Prefix-reuse scenarios (``WorkloadSpec.scenario``, DESIGN.md §6):
+
+  mixed      — the historical default (RNG stream bit-identical to before
+               scenarios existed).
+  multiturn  — chat sessions whose turn-t prompt extends turn-(t-1)'s
+               prompt + reply byte-for-byte (open-loop think-time gaps);
+               latency SLOs.
+  agentic    — single-chain collective DAGs whose stage-n prompt extends
+               stage-(n-1)'s full context (spawned closed-loop at stage
+               completion by the engine).
+
+Both carry real token identity: ``meta['prompt_tokens']`` (drawn from a
+deterministic per-session/per-chain stream, optionally behind a shared
+system prefix) feeds the prefix-cache hash chain AND the jax backend as
+actual model input; ``meta['output_tokens']`` is the stream's ground-truth
+continuation used to register output pages on simulated backends.
 """
 
 from __future__ import annotations
@@ -62,17 +79,41 @@ class WorkloadSpec:
     seed: int = 0
     # caps (0 = uncapped): clamp drawn lengths so workloads fit a real
     # backend's device KV pool (PagedJaxBackend.max_len); the RNG draw
-    # order is unchanged, only the resulting lengths are clipped
+    # order is unchanged, only the resulting lengths are clipped.  In the
+    # multiturn/agentic scenarios they cap each PER-TURN/PER-STAGE segment
+    # (user message, reply, observation) — the accumulated context is
+    # their sum, so token streams stay extension-consistent under caps.
     prompt_cap: int = 0
     output_cap: int = 0
+    # prefix-reuse scenarios
+    scenario: str = "mixed"           # mixed | multiturn | agentic
+    turns: Tuple[int, int] = (2, 6)   # turns per session (uniform, incl.)
+    think_time: float = 2.0           # mean extra gap between turns (s)
+    system_prompt_len: int = 0        # shared system prefix (tokens)
+    shared_system_frac: float = 0.0   # sessions/chains using the prefix
+
+
+# Token values are drawn below the reduced-model vocab (configs/archs.py
+# uses 256) so the SAME streams drive the sim hash chain and real jax
+# decoding.
+TOKEN_VOCAB = 256
+
+# fixed salts (not hash(str): Python's string hash is process-salted and
+# would break cross-run determinism) for the per-entity token streams
+_STREAM_SALTS = {"sys": 1, "sess": 2, "dag": 3}
 
 
 class WorkloadGen:
     def __init__(self, spec: WorkloadSpec):
+        if spec.scenario not in ("mixed", "multiturn", "agentic"):
+            raise ValueError(f"unknown scenario {spec.scenario!r} "
+                             "(mixed | multiturn | agentic)")
         self.spec = spec
         self.rng = np.random.default_rng(spec.seed)
         self._rid = 0
         self._dag = 0
+        self._agentic: Dict[int, Dict] = {}   # dag_id -> chain ground truth
+        self._sys: Optional[np.ndarray] = None
 
     # ------------------------------------------------------------------
     def _lens(self, coll: bool) -> Tuple[int, int]:
@@ -188,6 +229,8 @@ class WorkloadGen:
     def spawn_stage(self, dag: CollectiveDag, stage: int,
                     now: float) -> List[Request]:
         """Stage requests from the precomputed hidden ground truth."""
+        if dag.dag_id in self._agentic:
+            return self._spawn_agentic_stage(dag, stage, now)
         reqs = []
         for li, lo in self._dag_lens[dag.dag_id][stage]:
             r = Request(rid=self._next_rid(), app=dag.app, arrival=now,
@@ -208,6 +251,135 @@ class WorkloadGen:
                      + rng.normal(0, self.spec.hint_noise))
 
     # ------------------------------------------------------------------
+    # Prefix-reuse scenarios: deterministic token streams
+    # ------------------------------------------------------------------
+    def _stream_tokens(self, kind: str, sid: int, n: int) -> np.ndarray:
+        """First n tokens of entity (kind, sid)'s infinite stream.  The
+        stream interleaves user/observation and reply segments in arrival
+        order, so every prompt is a strict prefix of the stream — turn
+        t+1's prompt extends turn t's prompt + reply byte-for-byte."""
+        rng = np.random.default_rng(
+            (self.spec.seed, _STREAM_SALTS[kind], sid))
+        return rng.integers(0, TOKEN_VOCAB, size=n).astype(np.int32)
+
+    def _sys_tokens(self) -> np.ndarray:
+        if self._sys is None:
+            self._sys = self._stream_tokens(
+                "sys", 0, self.spec.system_prompt_len)
+        return self._sys
+
+    def _seg_lens(self, coll: bool) -> Tuple[int, int]:
+        """One (user/observation, reply) segment draw, capped per-segment
+        so accumulated contexts fit a real backend's pool."""
+        li, lo = self._lens(coll)
+        if self.spec.prompt_cap:
+            li = min(li, self.spec.prompt_cap)
+        if self.spec.output_cap:
+            lo = min(lo, self.spec.output_cap)
+        return li, lo
+
+    # -- multiturn: chat sessions accumulating history ------------------
+    def _mk_session(self, sid: int, t0: float
+                    ) -> List[Tuple[float, str, object]]:
+        sp = self.spec
+        n_turns = int(self.rng.integers(sp.turns[0], sp.turns[1] + 1))
+        shared = bool(self.rng.random() < sp.shared_system_frac)
+        sys_len = sp.system_prompt_len if shared else 0
+        events, hist, t = [], 0, t0
+        for turn in range(n_turns):
+            ui, uo = self._seg_lens(False)
+            hist += ui
+            plen = sys_len + hist
+            r = Request(rid=self._next_rid(), app="chatbot", arrival=t,
+                        prompt_len=plen, true_output_len=uo,
+                        slo=self._slo("latency"), session_id=sid)
+            stream = self._stream_tokens("sess", sid, hist + uo)
+            ptoks = stream[:hist]
+            if sys_len:
+                ptoks = np.concatenate([self._sys_tokens(), ptoks])
+            r.meta["prompt_tokens"] = ptoks
+            r.meta["output_tokens"] = stream[hist:hist + uo]
+            r.meta["hint"] = self._hint(uo)
+            r.meta["turn"] = turn
+            events.append((t, "r", r))
+            hist += uo
+            # open-loop think gap: rough service estimate + think time, so
+            # the next turn usually lands after this one finishes (and its
+            # pages are registered) — a closed loop would need engine
+            # feedback the generator deliberately doesn't have
+            t += (0.25 + plen / 2e4 + 0.035 * uo
+                  + float(self.rng.exponential(sp.think_time)))
+        return events
+
+    def _gen_multiturn(self) -> List[Tuple[float, str, object]]:
+        sp = self.spec
+        events: List[Tuple[float, str, object]] = []
+        t, sid = 0.0, 0
+        while True:
+            t += float(self.rng.exponential(1.0 / sp.rate))
+            if t >= sp.duration:
+                break
+            sid += 1
+            events.extend(self._mk_session(sid, t))
+        events.sort(key=lambda e: e[0])   # stable: ties keep stream order
+        return events
+
+    # -- agentic: chains whose stage-n prompt extends stage-(n-1) -------
+    def _mk_agentic_dag(self, t: float
+                        ) -> Tuple[CollectiveDag, List[Request]]:
+        """Single-width chain; stage n's prompt = stage n-1's full context
+        plus a fresh observation segment.  All segment lengths are drawn
+        up-front (hidden ground truth) so total work is scheduler-
+        independent; stages spawn closed-loop at stage completion."""
+        sp = self.spec
+        self._dag += 1
+        n_stages = int(self.rng.integers(3, 7))
+        shared = bool(self.rng.random() < sp.shared_system_frac)
+        slo = self._slo("collective", stages=n_stages)
+        dag = CollectiveDag(dag_id=self._dag, app="agent", arrival=t,
+                            ttlt=slo.ttlt, stage_sizes=[1] * n_stages)
+        lens = []
+        for _ in range(n_stages):
+            li, lo = self._seg_lens(True)
+            lens.append((max(4, li // 4), max(8, lo // n_stages)))
+        self._agentic[dag.dag_id] = dict(
+            lens=lens, sys_len=sp.system_prompt_len if shared else 0)
+        return dag, self.spawn_stage(dag, 0, t)
+
+    def _spawn_agentic_stage(self, dag: CollectiveDag, stage: int,
+                             now: float) -> List[Request]:
+        info = self._agentic[dag.dag_id]
+        lens, sys_len = info["lens"], info["sys_len"]
+        hist = sum(li + lo for li, lo in lens[:stage])
+        li, lo = lens[stage]
+        hist_p = hist + li
+        r = Request(rid=self._next_rid(), app="agent", arrival=now,
+                    prompt_len=sys_len + hist_p, true_output_len=lo,
+                    slo=SLOSpec("collective",
+                                ttlt=max(dag.deadline - now, 1e-3)),
+                    dag_id=dag.dag_id, stage=stage)
+        stream = self._stream_tokens("dag", dag.dag_id, hist_p + lo)
+        ptoks = stream[:hist_p]
+        if sys_len:
+            ptoks = np.concatenate([self._sys_tokens(), ptoks])
+        r.meta["prompt_tokens"] = ptoks
+        r.meta["output_tokens"] = stream[hist_p:hist_p + lo]
+        r.meta["hint"] = self._hint_det(lo, r.rid)
+        r.meta["n_stages"] = len(dag.stage_sizes)
+        return [r]
+
+    def _gen_agentic(self) -> List[Tuple[float, str, object]]:
+        sp = self.spec
+        events: List[Tuple[float, str, object]] = []
+        t = 0.0
+        while True:
+            t += float(self.rng.exponential(1.0 / sp.rate))
+            if t >= sp.duration:
+                break
+            events.append((t, "dag", self._mk_agentic_dag(t)))
+        return events
+
+    # ------------------------------------------------------------------
     def arrival_stream(self) -> Iterator[Tuple[float, str, object]]:
         """Time-ordered arrival events, consumable incrementally — a cluster
         router pulls one event at a time and dispatches it to a replica.
@@ -215,6 +387,12 @@ class WorkloadGen:
         the RNG draw order is identical to ``generate()`` so single-engine
         and cluster runs see the same workload."""
         sp = self.spec
+        if sp.scenario == "multiturn":
+            yield from self._gen_multiturn()
+            return
+        if sp.scenario == "agentic":
+            yield from self._gen_agentic()
+            return
         mix = np.array(sp.mix, float)
         mix = mix / mix.sum()
         for t in self._arrivals():

@@ -127,6 +127,45 @@ def test_backend_rejects_non_attention_arch():
         PagedJaxBackend(arch="xlstm-1.3b")
 
 
+def _run_multiturn(prefix_cache):
+    """Multi-turn chat on real JAX decoding: follow-up turns adopt the
+    previous turn's prompt pages (full pages + the prompt-boundary COW
+    tail) out of the prefix cache."""
+    from repro.serving.workload import WorkloadGen, WorkloadSpec
+    spec = WorkloadSpec(scenario="multiturn", rate=0.5, duration=8.0,
+                        seed=0, turns=(2, 3), think_time=40.0,
+                        system_prompt_len=8, shared_system_frac=1.0,
+                        prompt_cap=8, output_cap=4, slo_scale=50.0)
+    gen = WorkloadGen(spec)
+    be = PagedJaxBackend(num_blocks=64, page=16, max_len=128, seed=0)
+    eng = ServeEngine(be, make_scheduler("sarathi"),
+                      EngineConfig(max_batch=4, prefill_budget=32,
+                                   prefix_cache=prefix_cache),
+                      workload=gen)
+    singles, dags = gen.generate()
+    eng.load(singles, dags)
+    fin = eng.run()
+    return eng, be, fin
+
+
+def test_prefix_cache_token_streams_identical_on_vs_off():
+    """Acceptance: cached prefixes (adopted donor pages + COW-forked
+    tails) must decode the EXACT token streams the cache-off run computes
+    from scratch — shared pages never leak a mutation."""
+    eon, bon, fon = _run_multiturn(True)
+    eoff, boff, foff = _run_multiturn(False)
+    assert {r.rid for r in fon} == {r.rid for r in foff}
+    on = {r.rid: list(bon.generated[r.rid]) for r in fon}
+    off = {r.rid: list(boff.generated[r.rid]) for r in foff}
+    assert on == off                               # byte-identical
+    # the cache actually did something: hits, COW forks, fewer prefills
+    assert eon.prefix_hits > 0
+    assert eon.cow_forks > 0
+    assert eon.prefill_computed < eoff.prefill_computed
+    assert eoff.prefix_hits == 0
+    eon.kv.check_invariants()
+
+
 def test_cluster_two_replicas_real_execution():
     """2-replica ClusterEngine over PagedJaxBackend: the co-simulation
     routes real work, both replicas decode, fleet goodput is non-zero, and

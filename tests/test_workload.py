@@ -67,3 +67,81 @@ def test_hidden_stage_lengths_deterministic():
                 w += sum(o for _, o in lens)
         return w
     assert total_work(9) == total_work(9)
+
+
+# ---------------------------------------------------------------------------
+# Prefix-reuse scenarios (multiturn / agentic)
+# ---------------------------------------------------------------------------
+def _by_session(events):
+    by = {}
+    for _, _, r in events:
+        by.setdefault(r.session_id, []).append(r)
+    for rs in by.values():
+        rs.sort(key=lambda r: r.arrival)
+    return by
+
+
+def test_multiturn_prompts_accumulate_history_byte_for_byte():
+    gen = WorkloadGen(WorkloadSpec(scenario="multiturn", rate=0.5,
+                                   duration=30.0, seed=1,
+                                   system_prompt_len=16,
+                                   shared_system_frac=1.0))
+    events = list(gen.arrival_stream())
+    assert all(k == "r" for _, k, _ in events)
+    ts = [t for t, _, _ in events]
+    assert ts == sorted(ts)
+    by = _by_session(events)
+    assert len(by) > 3
+    for turns in by.values():
+        for a, b in zip(turns, turns[1:]):
+            pa = a.meta["prompt_tokens"]
+            oa = a.meta["output_tokens"]
+            pb = b.meta["prompt_tokens"]
+            # turn t+1's prompt = turn t's prompt + reply + new user msg
+            assert np.array_equal(pb[:len(pa)], pa)
+            assert np.array_equal(pb[len(pa):len(pa) + len(oa)], oa)
+            assert len(pb) == b.prompt_len
+            assert b.arrival > a.arrival
+        assert all(r.slo.kind == "latency" for r in turns)
+    # the shared system prefix is byte-identical across sessions
+    sys_prefixes = {tuple(t[0].meta["prompt_tokens"][:16])
+                    for t in by.values()}
+    assert len(sys_prefixes) == 1
+
+
+def test_agentic_stage_prompts_extend_previous_context():
+    gen = WorkloadGen(WorkloadSpec(scenario="agentic", rate=0.5,
+                                   duration=20.0, seed=2))
+    events = list(gen.arrival_stream())
+    assert all(k == "dag" for _, k, _ in events)
+    assert len(events) > 2
+    dag, stage0 = events[0][2]
+    assert dag.stage_sizes == [1] * len(dag.stage_sizes)
+    prev = stage0[0]
+    for stage in range(1, len(dag.stage_sizes)):
+        (cur,) = gen.spawn_stage(dag, stage, 5.0 * stage)
+        pp = prev.meta["prompt_tokens"]
+        po = prev.meta["output_tokens"]
+        pc = cur.meta["prompt_tokens"]
+        assert np.array_equal(pc[:len(pp)], pp)
+        assert np.array_equal(pc[len(pp):len(pp) + len(po)], po)
+        assert cur.prompt_len == len(pc)
+        assert cur.slo.kind == "collective"
+        prev = cur
+
+
+def test_scenario_tokens_fit_reduced_vocab():
+    from repro.serving.workload import TOKEN_VOCAB
+    gen = WorkloadGen(WorkloadSpec(scenario="multiturn", rate=1.0,
+                                   duration=10.0, seed=3,
+                                   system_prompt_len=32,
+                                   shared_system_frac=0.5))
+    for _, _, r in gen.arrival_stream():
+        assert int(r.meta["prompt_tokens"].max()) < TOKEN_VOCAB
+        assert r.meta["prompt_tokens"].dtype == np.int32
+
+
+def test_unknown_scenario_rejected():
+    import pytest
+    with pytest.raises(ValueError, match="scenario"):
+        WorkloadGen(WorkloadSpec(scenario="bogus"))
