@@ -59,12 +59,14 @@ def main() -> None:
 
     from benchmarks.common import save
     from benchmarks.cluster_sweep import ALL as CLUSTER
+    from benchmarks.gmg import ALL as GMG
     from benchmarks.paper_figs import ALL
     from benchmarks.prefix_reuse import ALL as PREFIX
 
     benches = dict(ALL)
     benches.update(CLUSTER)
     benches.update(PREFIX)
+    benches.update(GMG)
     benches["kernels"] = lambda quick=True: _kernel_bench()
     names = [n for n in benches if (not args.only or args.only in n)]
 

@@ -30,6 +30,9 @@ from repro.serving.workload import WorkloadSpec              # noqa: E402
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", choices=("sim", "jax"), default="sim")
+    ap.add_argument("--scheduler", default=None,
+                    help="serve ONLY this scheduler (e.g. gmg, tempo) "
+                    "instead of the default comparison set")
     ap.add_argument("--scenario", choices=("mixed", "multiturn", "agentic"),
                     default="mixed",
                     help="mixed SLO traffic, or the prefix-reuse workloads "
@@ -70,6 +73,8 @@ def main() -> None:
         engine_cfg = EngineConfig(prefix_cache=args.prefix_cache)
         backend_kwargs = None
         schedulers = ("vllm", "sarathi", "tempo")
+    if args.scheduler:
+        schedulers = (args.scheduler,)
 
     print(f"{'scheduler':<16} {'gain':>12} {'goodput':>9} {'tok/s':>9} "
           f"{'lat met':>8} {'thr met':>8} {'coll met':>9} {'cached':>7}")

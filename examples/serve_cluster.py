@@ -1,6 +1,7 @@
 """Cluster serving: one workload, N co-simulated replicas, SLO-aware routing.
 
   PYTHONPATH=src python examples/serve_cluster.py [--autoscale]
+      [--scheduler tempo|gmg|...]
 
 Default: routes a mixed-SLO workload (paper §2.1: latency streams, deadline
 jobs, collective agent DAGs) across a 4-replica fleet under every router
@@ -24,12 +25,14 @@ from repro.serving.workload import WorkloadSpec         # noqa: E402
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--autoscale", action="store_true")
+    ap.add_argument("--scheduler", default="tempo",
+                    help="per-replica scheduler (tempo, gmg, ...)")
     args = ap.parse_args()
 
     if args.autoscale:
         spec = WorkloadSpec(rate=6.0, duration=60.0, seed=3, ramp_peak=5.0)
         f = run_cluster_experiment(
-            "tempo", router="slo-margin", n_replicas=1, spec=spec,
+            args.scheduler, router="slo-margin", n_replicas=1, spec=spec,
             warmup=192, autoscale=True,
             autoscaler_cfg=AutoscalerConfig(min_replicas=1, max_replicas=6,
                                             cooldown=6.0, window=20.0))
@@ -44,8 +47,8 @@ def main():
     print(f"{'router':<14} {'goodput':>8} {'gain':>10} {'lat met':>8} "
           f"{'coll met':>9} {'routed/replica'}")
     for router in ROUTERS:
-        f = run_cluster_experiment("tempo", router=router, n_replicas=4,
-                                   spec=spec, warmup=192)
+        f = run_cluster_experiment(args.scheduler, router=router,
+                                   n_replicas=4, spec=spec, warmup=192)
         pt = f.fleet.per_type
         get = lambda k: pt.get(k, {}).get("slo_met", float("nan"))
         routed = [n for _, n in sorted(f.routed.items())]

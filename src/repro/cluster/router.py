@@ -226,26 +226,46 @@ class SLOMarginRouter(Router):
                                 + self._serve_time(tr, r) * stages)
                 for r in reqs)
             # existing work: admitting `serve` seconds of tokens delays the
-            # replica's live deadline work by ~serve/slots each.  Stride-
-            # sample busy replicas and rescale — truncating would make the
-            # MOST loaded replica look cheapest, a herding feedback loop.
+            # replica's live deadline work by ~serve/slots each.
             delay = serve / max(rep.engine.cfg.max_batch, 1)
-            live_slo = [r for r in live if r.slo.kind != "none"]
-            stride = max(1, -(-len(live_slo) // self.margin_cap))
-            sample = live_slo[::stride]
-            scale = len(live_slo) / max(len(sample), 1)
-            deg = 0.0
-            for r in sample:
-                base = (now - r.arrival) + tr.est_remaining_time(
-                    r, self._est_out(r))
-                deg += self._shortfall(r, base + delay) \
-                    - self._shortfall(r, base)
-            cost += scale * deg
-            # expected wait is the base load signal; margin loss is a
-            # correction in capacity-seconds.  A pure margin score would
-            # herd every arrival onto the first zero-cost replica whenever
-            # no deadline binds anywhere.
-            key = (wait + cost / self.gain_rate, rep.rid)
+            # margin_summary is recomputed inside schedule(), which stops
+            # running once a replica drains — the LIVENESS gate (not a
+            # timestamp: replica clocks legitimately lag the fleet clock
+            # in the co-simulation) is what keeps stale late/critical
+            # counts from penalising an idle replica forever; the
+            # summary's "t"/"lateness" fields are diagnostic
+            ms = getattr(rep.engine.sched, "margin_summary", None)
+            if ms is not None and live:
+                # the scheduler already grouped its requests by SLO margin
+                # (gmg): consume the group census instead of re-deriving
+                # slack request-by-request.  Tight requests (late/critical)
+                # have no margin to absorb the added delay — each eats it
+                # in full; on-track/slack absorb it for free.
+                counts = ms["counts"]
+                tight = counts.get("late", 0) + counts.get("critical", 0)
+                key = (wait + cost / self.gain_rate + delay * tight,
+                       rep.rid)
+            else:
+                # schedulers without margin groups: stride-sample the live
+                # set and price the inflicted degradation.  Truncating
+                # would make the MOST loaded replica look cheapest, a
+                # herding feedback loop — rescale instead.
+                live_slo = [r for r in live if r.slo.kind != "none"]
+                stride = max(1, -(-len(live_slo) // self.margin_cap))
+                sample = live_slo[::stride]
+                scale = len(live_slo) / max(len(sample), 1)
+                deg = 0.0
+                for r in sample:
+                    base = (now - r.arrival) + tr.est_remaining_time(
+                        r, self._est_out(r))
+                    deg += self._shortfall(r, base + delay) \
+                        - self._shortfall(r, base)
+                cost += scale * deg
+                # expected wait is the base load signal; margin loss is a
+                # correction in capacity-seconds.  A pure margin score
+                # would herd every arrival onto the first zero-cost
+                # replica whenever no deadline binds anywhere.
+                key = (wait + cost / self.gain_rate, rep.rid)
             if best is None or key < best_key:
                 best, best_key = rep, key
         return best

@@ -125,6 +125,7 @@ class EDF(SchedulerBase):
 
 
 def make_scheduler(name: str, **kw) -> SchedulerBase:
+    from repro.core.gmg import GroupedMarginScheduler
     from repro.core.scheduler import TempoScheduler
     if name == "tempo":
         return TempoScheduler(**kw)
@@ -132,5 +133,9 @@ def make_scheduler(name: str, **kw) -> SchedulerBase:
         return TempoScheduler(precise=True, **kw)
     if name == "tempo-sjf":
         return SJF(**kw)
+    if name == "gmg":
+        return GroupedMarginScheduler(**kw)
+    if name == "gmg-precise":
+        return GroupedMarginScheduler(precise=True, **kw)
     return {"vllm": VllmFCFS, "sarathi": SarathiServe,
             "autellix": AutellixPLAS, "sjf": SJF, "edf": EDF}[name](**kw)

@@ -1,11 +1,17 @@
-"""Tempo's SLO-aware scheduler: Largest Service Density First (paper §4.2,
-Algorithm 1) with cost-aware preemption, time-slicing quanta, a starvation
-reserve for non-SLO traffic, and pluggable fairness mixing (§4.3).
+"""SLO-aware schedulers: the shared Request-Analyzer base, plus Tempo's
+Largest Service Density First ranking (paper §4.2, Algorithm 1) with
+cost-aware preemption, time-slicing quanta, a starvation reserve for
+non-SLO traffic, and pluggable fairness mixing (§4.3).  The grouped-margin
+goodput scheduler (paper §4's namesake algorithm) lives in ``core/gmg.py``
+on top of the same base.
 
 Engine contract (continuous batching with chunked prefill):
   every engine step the scheduler returns a ``Decision``:
     decode_ids  — requests that decode one token this step (≤ max_batch)
     prefill     — {rid: chunk_tokens} sharing the step's prefill token budget
+    preempted   — requests displaced from their slot (KV stays resident)
+    shed        — requests dropped outright (KV released, counted as SLO
+                  misses by the metrics layer)
 
 Density (Eq. 4):
             projected service gain under the (refined) estimates
@@ -38,6 +44,7 @@ class Decision:
     decode_ids: List[int]
     prefill: Dict[int, int]
     preempted: List[int] = dataclasses.field(default_factory=list)
+    shed: List[int] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -72,10 +79,20 @@ class SchedulerBase:
 
 
 # ---------------------------------------------------------------------------
-# Tempo (LSDF)
+# Shared Request-Analyzer machinery (Algorithm 1: AnalyzeRequest)
 # ---------------------------------------------------------------------------
-class TempoScheduler(SchedulerBase):
-    name = "tempo"
+class AnalyzedSchedulerBase(SchedulerBase):
+    """Everything Tempo, the oracle variant, and the grouped-margin
+    scheduler have in common: QRF length-bound annotation at admission,
+    online refinement as generation progresses, the DAG tracker hooks, the
+    quanta-gated priority cache, and the cached priority ORDER — including
+    the rule that freshly admitted requests become visible (and therefore
+    prefill-eligible) immediately, not at the next quanta refresh.
+
+    Subclasses implement ``_priority_raw`` (the ranking signal the cache
+    stores) and ``schedule``.
+    """
+
     needs_predictions = True
 
     def __init__(self, predictor: Optional[LengthPredictor] = None,
@@ -83,10 +100,8 @@ class TempoScheduler(SchedulerBase):
                  tracker: Optional[SLOTracker] = None,
                  service: Optional[ServiceModel] = None,
                  *, precise: bool = False, use_graph: bool = True,
-                 use_predictor: bool = True, reserve: float = 0.1,
-                 quanta: int = 20, refine_every: int = 32,
-                 fairness_f: float = 0.0,
-                 fairness_fn: Optional[Callable[[Request], float]] = None):
+                 use_predictor: bool = True,
+                 quanta: int = 20, refine_every: int = 32):
         self.predictor = predictor or LengthPredictor()
         self.matcher = matcher or DagMatcher()
         self.dag_tracker = DagTracker(self.matcher)
@@ -95,24 +110,24 @@ class TempoScheduler(SchedulerBase):
         self.precise = precise
         self.use_graph = use_graph
         self.use_predictor = use_predictor
-        self.reserve = reserve
         self.quanta = quanta
         self.refine_every = refine_every
-        self.fairness_f = fairness_f
-        self.fairness_fn = fairness_fn
         self._running: Set[int] = set()
-        self._attained: Dict[int, float] = {}
         # priority cache (paper §5): recomputed on arrivals/finishes and at
         # quanta boundaries, not every engine step
         self._prio: Dict[int, float] = {}
         self._prio_step = -10**9
         self._dirty = True
+        # arrivals since the last order rebuild: merged into the cached
+        # order on the NEXT schedule() call so a new request never waits a
+        # quanta (or the dirty+5 backoff) to start prefilling
+        self._new_rids: List[int] = []
+        self._order: Optional[List[int]] = None
 
-    # ------------------------------------------------------------------
-    # Request Analyzer hooks (Algorithm 1: AnalyzeRequest)
     # ------------------------------------------------------------------
     def on_arrival(self, req: Request, view: EngineView):
         self._dirty = True
+        self._new_rids.append(req.rid)
         if self.precise:
             req.pred_upper = float(req.true_output_len)
             req.pred_point = float(req.true_output_len)
@@ -148,6 +163,73 @@ class TempoScheduler(SchedulerBase):
         ub = req.pred_upper if req.pred_upper is not None else 512.0
         return max(ub, req.decoded + 1.0)
 
+    def _priority_raw(self, req: Request, view: EngineView) -> float:
+        raise NotImplementedError
+
+    def _refresh_priorities(self, view: EngineView, reqs) -> None:
+        stale = (view.step - self._prio_step) >= self.quanta
+        if not stale and not (self._dirty and
+                              (view.step - self._prio_step) >= 5):
+            return
+        self._prio = {r.rid: self._priority_raw(r, view) for r in reqs}
+        self._prio_step = view.step
+        self._dirty = False
+
+    def _priority(self, req: Request, view: EngineView) -> float:
+        p = self._prio.get(req.rid)
+        if p is None:
+            p = self._priority_raw(req, view)
+            self._prio[req.rid] = p
+        return p
+
+    def _update_order(self, view: EngineView, reqs: Sequence[Request],
+                      at_quanta: bool) -> List[int]:
+        """Cached priority order over SLO-bearing requests.  Rebuilt at
+        refresh boundaries — and whenever arrivals landed since, so fresh
+        requests are schedulable (in particular: prefillable) on the very
+        step after admission instead of stalling for up to 5 steps with
+        idle budget."""
+        if at_quanta or self._order is None:
+            self._order = sorted(
+                (r.rid for r in reqs if r.slo.kind != "none"),
+                key=lambda rid: (-self._prio.get(rid, 0.0), rid))
+            self._new_rids.clear()
+        elif self._new_rids:
+            for rid in self._new_rids:
+                r = view.requests.get(rid)
+                if r is not None and r.slo.kind != "none":
+                    self._priority(r, view)       # compute + cache
+            self._order = sorted(
+                (r.rid for r in reqs if r.slo.kind != "none"),
+                key=lambda rid: (-self._prio.get(rid, 0.0), rid))
+            self._new_rids.clear()
+        return self._order
+
+
+# ---------------------------------------------------------------------------
+# Tempo (LSDF)
+# ---------------------------------------------------------------------------
+class TempoScheduler(AnalyzedSchedulerBase):
+    name = "tempo"
+
+    def __init__(self, predictor: Optional[LengthPredictor] = None,
+                 matcher: Optional[DagMatcher] = None,
+                 tracker: Optional[SLOTracker] = None,
+                 service: Optional[ServiceModel] = None,
+                 *, precise: bool = False, use_graph: bool = True,
+                 use_predictor: bool = True, reserve: float = 0.1,
+                 quanta: int = 20, refine_every: int = 32,
+                 fairness_f: float = 0.0,
+                 fairness_fn: Optional[Callable[[Request], float]] = None):
+        super().__init__(predictor, matcher, tracker, service,
+                         precise=precise, use_graph=use_graph,
+                         use_predictor=use_predictor, quanta=quanta,
+                         refine_every=refine_every)
+        self.reserve = reserve
+        self.fairness_f = fairness_f
+        self.fairness_fn = fairness_fn
+
+    # ------------------------------------------------------------------
     def density(self, req: Request, view: EngineView) -> float:
         """ServiceDensity(r) — Algorithm 1 lines 13–20."""
         now = view.now
@@ -189,22 +271,6 @@ class TempoScheduler(SchedulerBase):
                 + self.fairness_f * self.fairness_fn(req)
         return d
 
-    def _refresh_priorities(self, view: EngineView, reqs):
-        stale = (view.step - self._prio_step) >= self.quanta
-        if not stale and not (self._dirty and
-                              (view.step - self._prio_step) >= 5):
-            return
-        self._prio = {r.rid: self._priority_raw(r, view) for r in reqs}
-        self._prio_step = view.step
-        self._dirty = False
-
-    def _priority(self, req: Request, view: EngineView) -> float:
-        p = self._prio.get(req.rid)
-        if p is None:
-            p = self._priority_raw(req, view)
-            self._prio[req.rid] = p
-        return p
-
     # ------------------------------------------------------------------
     def _preempt_ok(self, cand: Request, running: Request,
                     view: EngineView) -> bool:
@@ -233,12 +299,7 @@ class TempoScheduler(SchedulerBase):
         decodable = [r for r in reqs if r.prefill_remaining == 0
                      and not r.done]
         at_quanta = (view.step - self._prio_step) == 0  # just refreshed
-
-        # cached orderings (recomputed with the priority cache)
-        if at_quanta or not hasattr(self, "_order"):
-            self._order = sorted(
-                (r.rid for r in reqs if r.slo.kind != "none"),
-                key=lambda rid: -self._prio.get(rid, 0.0))
+        order = self._update_order(view, reqs, at_quanta)
 
         # 1) latency pacing: urgent = next token due within the pacing
         #    window (fraction of the TBT interval elapsed since the last
@@ -275,14 +336,14 @@ class TempoScheduler(SchedulerBase):
         #    with cost-aware preemption at the boundary
         deadline_d = {r.rid: r for r in decodable
                       if r.slo.kind in ("throughput", "collective")}
-        incumbents = [rid for rid in self._order
+        incumbents = [rid for rid in order
                       if rid in deadline_d and rid in self._running]
-        queue = [rid for rid in self._order
+        queue = [rid for rid in order
                  if rid in deadline_d and rid not in self._running]
         k = max(cap - len(decode_ids), 0)
         preempted: List[int] = []
         if at_quanta:
-            pool = [rid for rid in self._order if rid in deadline_d]
+            pool = [rid for rid in order if rid in deadline_d]
             sel = pool[:k]
             displaced = [rid for rid in pool[k:] if rid in self._running]
             new_sel = [rid for rid in reversed(sel)
@@ -319,7 +380,7 @@ class TempoScheduler(SchedulerBase):
                     chosen.add(r.rid)
         if len(decode_ids) < view.max_batch:
             dec_set = {r.rid for r in decodable}
-            for rid in self._order:
+            for rid in order:
                 if len(decode_ids) >= view.max_batch:
                     break
                 if rid in dec_set and rid not in chosen:
@@ -329,7 +390,7 @@ class TempoScheduler(SchedulerBase):
         # 4) chunked prefill by cached priority order
         budget = view.prefill_budget
         prefill: Dict[int, int] = {}
-        for rid in self._order:
+        for rid in order:
             if budget <= 0:
                 break
             r = view.requests.get(rid)

@@ -2,14 +2,39 @@
 
 Token processing speed is stable and predictable (paper fig. 8): TTFT/TBT
 depend on context length and batch composition, not prompt content.  The
-tracker maintains EWMA profiles of prefill throughput (tokens/s) and decode
-step time, refreshed online from executed steps, and converts length
-estimates into time estimates for the scheduler."""
+tracker maintains two views of the replica's speed, both refreshed online
+from executed steps:
+
+  ``SpeedProfile``  — scalar EWMAs of prefill throughput (tokens/s) and
+                      decode step time.  Mixed chunked-prefill+decode steps
+                      (the common case under continuous batching) are
+                      APPORTIONED between the two EWMAs using the current
+                      estimates (EM-style fixed point) — charging the full
+                      step time to both profiles would inflate decode_step
+                      by the prefill time and deflate prefill_tps by the
+                      decode time, corrupting every margin/density estimate
+                      downstream.
+  ``StepCostModel`` — a batch-aware linear fit of the step time over
+                      (prefill tokens, has-decode, decode seqs, total
+                      context), refit online from a sliding window of step
+                      observations.  This is the model the grouped-margin
+                      scheduler prices batch composition with: the marginal
+                      cost of adding a sequence to the batch is the model's
+                      per-seq + per-context-token coefficients, and the
+                      remaining-time estimate of a request depends on the
+                      batch it rides in.
+
+The scalar profile is the always-available fallback (cold replicas, the
+cluster router's zero-step bootstrap); the fitted model takes over as soon
+as it has support.
+"""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.serving.request import Request
 
@@ -23,29 +48,162 @@ class SpeedProfile:
 
     def update(self, step_time: float, prefill_tokens: int,
                decode_seqs: int):
+        """Fold one executed step into the EWMAs.
+
+        Mixed steps are split between the profiles in proportion to the
+        time each phase is currently *estimated* to take (an EM step: the
+        apportioning uses the running estimates, the estimates are updated
+        from the apportioned observation).  Pure prefill / pure decode
+        steps reduce to the unapportioned update exactly.
+        """
         self.samples += 1
-        if prefill_tokens > 0 and step_time > 0:
-            tps = prefill_tokens / step_time
+        if step_time <= 0:
+            return
+        est_p = prefill_tokens / max(self.prefill_tps, 1.0) \
+            if prefill_tokens > 0 else 0.0
+        est_d = self.decode_step if decode_seqs > 0 else 0.0
+        total = est_p + est_d
+        if prefill_tokens > 0:
+            share = est_p / total if total > 0 else 1.0
+            t_p = max(step_time * share, 1e-9)
+            tps = prefill_tokens / t_p
             self.prefill_tps += self.ewma * (tps - self.prefill_tps)
         if decode_seqs > 0:
-            self.decode_step += self.ewma * (step_time - self.decode_step)
+            share = est_d / total if total > 0 else 1.0
+            self.decode_step += self.ewma * (step_time * share
+                                             - self.decode_step)
+
+
+class StepCostModel:
+    """Online ridge fit:  t_step ≈ w · [1, p, 1{d>0}, d, ctx]
+
+    where p = prefill tokens this step, d = decode batch size, ctx = total
+    context tokens read by the decode batch.  The has-decode indicator
+    captures the per-step weight-read cost that is paid once regardless of
+    batch size (the dominant decode term on HBM-bound replicas); the d and
+    ctx coefficients price marginal batch composition.
+
+    Observations land in a sliding window; the model refits every
+    ``refit_every`` new samples (a 5×5 solve — microseconds).  ``predict``
+    returns None until the fit has support, letting callers fall back to
+    the scalar ``SpeedProfile``.
+    """
+
+    N_FEAT = 5
+
+    def __init__(self, window: int = 2048, refit_every: int = 64,
+                 ridge: float = 1e-4, min_samples: int = 48):
+        self.window = window
+        self.refit_every = refit_every
+        self.ridge = ridge
+        self.min_samples = min_samples
+        self._obs: List[Tuple[float, float, float, float, float]] = []
+        self._y: List[float] = []
+        self._since_fit = 0
+        self._w: Optional[np.ndarray] = None
+        self.fits = 0
+
+    # scale factors keep the normal equations well conditioned: token
+    # counts are O(1e3-1e5), step times O(1e-2)
+    _SCALE = np.array([1.0, 1e-3, 1.0, 1e-1, 1e-4])
+
+    @staticmethod
+    def _feat(prefill_tokens: float, decode_seqs: float,
+              ctx_total: float) -> Tuple[float, ...]:
+        return (1.0, float(prefill_tokens),
+                1.0 if decode_seqs > 0 else 0.0,
+                float(decode_seqs), float(ctx_total))
+
+    def observe(self, step_time: float, prefill_tokens: int,
+                decode_seqs: int, ctx_total: float) -> None:
+        if step_time <= 0:
+            return
+        self._obs.append(self._feat(prefill_tokens, decode_seqs, ctx_total))
+        self._y.append(float(step_time))
+        if len(self._obs) > self.window:
+            del self._obs[: len(self._obs) - self.window]
+            del self._y[: len(self._y) - self.window]
+        self._since_fit += 1
+        if self._since_fit >= self.refit_every \
+                and len(self._obs) >= self.min_samples:
+            self.fit()
+
+    def fit(self) -> None:
+        self._since_fit = 0
+        X = np.asarray(self._obs) * self._SCALE
+        y = np.asarray(self._y)
+        A = X.T @ X + self.ridge * np.eye(self.N_FEAT)
+        w = np.linalg.solve(A, X.T @ y)
+        self._w = w * self._SCALE
+        self.fits += 1
+
+    @property
+    def fitted(self) -> bool:
+        return self._w is not None
+
+    def predict(self, prefill_tokens: float, decode_seqs: float,
+                ctx_total: float) -> Optional[float]:
+        """Predicted step time, or None before the first fit.  Clamped to
+        a small positive floor — ridge noise must never produce a zero or
+        negative step time (margins divide by it)."""
+        if self._w is None:
+            return None
+        t = float(np.dot(self._w,
+                         self._feat(prefill_tokens, decode_seqs, ctx_total)))
+        return max(t, 1e-5)
 
 
 class SLOTracker:
     def __init__(self):
         self.profile = SpeedProfile()
+        self.cost_model = StepCostModel()
         self.history_tbt: List[float] = []
 
     # ------------------------------------------------------------------
     def on_step(self, step_time: float, prefill_tokens: int,
-                decode_seqs: int):
+                decode_seqs: int, ctx_total: Optional[float] = None):
         self.profile.update(step_time, prefill_tokens, decode_seqs)
+        if ctx_total is not None:
+            self.cost_model.observe(step_time, prefill_tokens, decode_seqs,
+                                    ctx_total)
 
     # ------------------------------------------------------------------
     def est_prefill_time(self, tokens: int) -> float:
+        """Prefill compute time.  Prefers the fitted per-token prefill
+        coefficient: the EM-apportioned EWMA split is only identifiable
+        when the step stream contains pure or compositionally varied
+        steps, while the joint fit isolates the prefill slope from any
+        mix of observations.  The slope alone (no per-step intercept) is
+        deliberate: chunked prefill rides along steps whose fixed
+        overhead the decode batch pays anyway, so the MARGINAL cost of a
+        prompt is ~slope×tokens; only on a fully idle replica does this
+        undershoot, by ~overhead×n_chunks ≪ any TTFT SLO."""
+        w = self.cost_model._w
+        if w is not None and w[1] > 1e-9:
+            return tokens * float(w[1])
         return tokens / max(self.profile.prefill_tps, 1.0)
 
-    def est_decode_time(self, tokens: float) -> float:
+    def est_step_time(self, decode_seqs: int, ctx_total: float,
+                      prefill_tokens: int = 0) -> float:
+        """Batch-aware per-step time; falls back to the scalar decode EWMA
+        (plus the prefill estimate) until the cost model has support."""
+        t = self.cost_model.predict(prefill_tokens, decode_seqs, ctx_total)
+        if t is not None:
+            return t
+        t = self.profile.decode_step if decode_seqs > 0 else 0.0
+        if prefill_tokens > 0:
+            t += self.est_prefill_time(prefill_tokens)
+        return max(t, 1e-5)
+
+    def est_decode_time(self, tokens: float,
+                        decode_seqs: Optional[int] = None,
+                        ctx_total: Optional[float] = None) -> float:
+        """Time to emit ``tokens`` output tokens.  With batch composition
+        given, each token costs one step of the projected batch; otherwise
+        the scalar EWMA step time is used."""
+        if decode_seqs is not None and ctx_total is not None:
+            return tokens * self.est_step_time(max(decode_seqs, 1),
+                                               ctx_total)
         return tokens * self.profile.decode_step
 
     def est_first_token_time(self, req: Request) -> float:
@@ -55,12 +213,16 @@ class SLOTracker:
         cost) exactly as it shrinks the real prefill."""
         return self.est_prefill_time(req.prefill_remaining)
 
-    def est_remaining_time(self, req: Request, est_total_out: float) -> float:
+    def est_remaining_time(self, req: Request, est_total_out: float,
+                           decode_seqs: Optional[int] = None,
+                           ctx_total: Optional[float] = None) -> float:
         """Remaining service time if scheduled continuously from now.
-        Prefill is the uncached suffix only (see est_first_token_time)."""
+        Prefill is the uncached suffix only (see est_first_token_time);
+        with a batch composition given, decode is priced per-step under
+        that batch instead of the scalar EWMA."""
         rem_out = max(est_total_out - req.decoded, 1.0)
         return self.est_prefill_time(req.prefill_remaining) \
-            + self.est_decode_time(rem_out)
+            + self.est_decode_time(rem_out, decode_seqs, ctx_total)
 
     def est_ttlt(self, req: Request, now: float,
                  est_total_out: float) -> float:

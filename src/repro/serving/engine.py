@@ -72,9 +72,15 @@ class ServeEngine:
         self.requests: Dict[int, Request] = {}
         self.dags: Dict[int, CollectiveDag] = {}
         self.finished: List[Request] = []
+        # requests dropped by the scheduler (Decision.shed): lifecycle over,
+        # KV released, finish_t stays None — the metrics layer counts them
+        # (and anything else admitted-but-unfinished) as SLO misses
+        self.shed: List[Request] = []
         self.now = 0.0
         self.step = 0
-        self.step_log: List[Tuple[float, int, int]] = []
+        # (t, prefill_tokens, decode_seqs, decode_ctx_total) per step — the
+        # observation stream the SLOTracker's batch-aware cost model fits
+        self.step_log: List[Tuple[float, int, int, int]] = []
         self.preempt_count = 0
         self.swap_bytes = 0.0
         # prefix-cache accounting (Summary.prefix_* / cached_frac)
@@ -203,6 +209,31 @@ class ServeEngine:
     def has_live(self) -> bool:
         return any(r.state != ReqState.FINISHED
                    for r in self.requests.values())
+
+    @property
+    def admitted_count(self) -> int:
+        """Every request ever admitted (finished + live + shed)."""
+        return len(self.requests)
+
+    @property
+    def submitted_count(self) -> int:
+        """The honest goodput denominator: admitted requests, queued
+        not-yet-admitted arrivals, AND the planned-but-unspawned stages
+        of unfinished DAGs (stage n+1 only materialises when stage n
+        completes — truncating a run mid-DAG must not let the unspawned
+        tail vanish from goodput_frac).  Equals admitted_count for a
+        fully drained run."""
+        n = len(self.requests)
+        for kind, obj in self.pending_items():
+            if kind == "r":
+                n += 1
+            else:
+                dag, reqs = obj
+                n += len(reqs) + sum(dag.stage_sizes[1:])
+        for dag in self.dags.values():
+            if not dag.finished:
+                n += sum(dag.stage_sizes[dag.cur_stage + 1:])
+        return n
 
     def peek_next_event(self) -> Optional[float]:
         """Earliest time this engine can make progress: its own clock while
@@ -386,6 +417,18 @@ class ServeEngine:
         self._step_swap = 0.0
         self._kv_blocked = False
         self.backend.begin_step()
+        # shed requests: dropped outright (scheduler decided the §3.1 decay
+        # left nothing worth serving and KV is under pressure).  Blocks are
+        # released BEFORE this step's allocations so the freed pages are
+        # usable immediately.
+        for rid in getattr(dec, "shed", ()):
+            r = self.requests.get(rid)
+            if r is None or r.state == ReqState.FINISHED:
+                continue
+            r.state = ReqState.FINISHED
+            self.kv.release(rid)
+            self.backend.kv_release(rid)
+            self.shed.append(r)
         # displaced requests: slot lost; KV stays resident until pressure
         for rid in dec.preempted:
             r = self.requests.get(rid)
@@ -445,10 +488,13 @@ class ServeEngine:
         dt += self._step_swap / self.cfg.swap_bw
         self.now += dt
         self.step += 1
-        self.step_log.append((self.now, prefill_tokens, len(decoded_reqs)))
+        ctx_total = sum(decode_ctxs)
+        self.step_log.append((self.now, prefill_tokens, len(decoded_reqs),
+                              ctx_total))
         tr = self._tracker()
         if tr is not None:
-            tr.on_step(dt, prefill_tokens, len(decoded_reqs))
+            tr.on_step(dt, prefill_tokens, len(decoded_reqs),
+                       float(ctx_total))
 
         finished_now = []
         for r in decoded_reqs:

@@ -191,9 +191,16 @@ class BlockManager:
 
     def release(self, rid: int):
         a = self.seqs.pop(rid, None)
-        if a and not a.swapped:
-            for b in a.blocks:
-                self._decref(b)
+        if a is None:
+            return
+        if a.swapped:
+            # a swapped-out sequence can be released (e.g. a preempted
+            # request shed by the scheduler): its host copy is dropped,
+            # so the swapped-footprint counter must come back down
+            self.swapped_tokens -= a.tokens
+            return
+        for b in a.blocks:
+            self._decref(b)
 
     # ------------------------------------------------------------------
     # Prefix cache: match / adopt / register / COW fork

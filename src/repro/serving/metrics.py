@@ -33,6 +33,15 @@ class Summary:
     per_type: Dict[str, Dict[str, float]]
     gain_timeline: List[float]      # per-bucket service gain
     preemptions: int = 0
+    # honest denominators: goodput_frac is met / n_admitted, so a request
+    # that was shed (dropped by the scheduler) or never finished (run
+    # truncated, replica retired) counts as an SLO miss instead of
+    # silently vanishing from the metric
+    n_admitted: int = 0             # every request admitted to an engine
+    n_shed: int = 0                 # ... dropped via Decision.shed
+    @property
+    def n_unfinished(self) -> int:
+        return max(self.n_admitted - self.n_finished, 0)
     # prefix-cache accounting (engine counters; zeros when cache off or no
     # request carried a prefix identity)
     prefill_tokens: int = 0         # prompt tokens actually computed
@@ -52,6 +61,8 @@ class Summary:
 
     def row(self) -> Dict[str, float]:
         return dict(scheduler=self.scheduler, n=self.n_finished,
+                    n_admitted=self.n_admitted,
+                    n_unfinished=self.n_unfinished, n_shed=self.n_shed,
                     service_gain=round(self.service_gain, 1),
                     gain_frac=round(self.service_gain / max(self.max_gain, 1e-9), 4),
                     goodput_rps=round(self.goodput_rps, 3),
@@ -66,16 +77,37 @@ def summarize(name: str, finished: List[Request], service: ServiceModel,
               makespan: float, bucket: float = 60.0,
               preemptions: int = 0,
               prefill_tokens: int = 0, cached_tokens: int = 0,
-              prefix_hits: int = 0, prefix_lookups: int = 0) -> Summary:
-    gain = sum(service.realized_gain(r) for r in finished)
-    maxg = sum(service.max_gain(r) for r in finished)
+              prefix_hits: int = 0, prefix_lookups: int = 0,
+              n_admitted: Optional[int] = None,
+              shed: Optional[List[Request]] = None) -> Summary:
+    """Aggregate a run.  ``n_admitted`` is the count of requests the
+    engine(s) admitted — shed and never-finished requests are (n_admitted
+    − n_finished) and count as SLO misses in ``goodput_frac``.  Omitting
+    it falls back to the finished count (pre-fix behaviour, correct only
+    for fully-drained runs with no shedding).  ``shed`` requests
+    contribute their partial realized gain (a dropped latency stream DID
+    deliver tokens) and their max gain to the gain fraction."""
+    shed = shed or []
+    gain = sum(service.realized_gain(r) for r in finished) \
+        + sum(service.realized_gain(r) for r in shed)
+    maxg = sum(service.max_gain(r) for r in finished) \
+        + sum(service.max_gain(r) for r in shed)
     met = [r for r in finished if service.slo_met(r)]
-    toks = sum(r.prompt_len + r.decoded for r in finished)
+    # shed requests DID consume capacity (and fail their SLO): they are
+    # part of the served population everywhere, not just the denominator.
+    # Their token contribution is what was actually PROCESSED (prefilled,
+    # possibly mid-prompt) — crediting the full prompt would inflate the
+    # very throughput number this accounting exists to make honest.
+    served = finished + shed
+    toks = sum(r.prompt_len + r.decoded for r in finished) \
+        + sum(r.prefilled + r.decoded for r in shed)
     mk = max(makespan, 1e-9)
+    n_adm = n_admitted if n_admitted is not None else len(served)
+    n_adm = max(n_adm, len(served))
 
     per_type: Dict[str, Dict[str, float]] = {}
     for kind in ("latency", "throughput", "collective", "none"):
-        rs = [r for r in finished if r.slo.kind == kind]
+        rs = [r for r in served if r.slo.kind == kind]
         if not rs:
             continue
         ttfts = [r.ttft() for r in rs if r.ttft() is not None]
@@ -99,9 +131,10 @@ def summarize(name: str, finished: List[Request], service: ServiceModel,
     return Summary(
         scheduler=name, n_finished=len(finished), service_gain=gain,
         max_gain=maxg, goodput_rps=len(met) / mk,
-        goodput_frac=len(met) / max(len(finished), 1),
+        goodput_frac=len(met) / max(n_adm, 1),
         throughput_tok_s=toks / mk, makespan=mk, per_type=per_type,
         gain_timeline=timeline, preemptions=preemptions,
+        n_admitted=n_adm, n_shed=len(shed),
         prefill_tokens=prefill_tokens, cached_tokens=cached_tokens,
         prefix_hits=prefix_hits, prefix_lookups=prefix_lookups)
 
@@ -142,7 +175,10 @@ def summarize_fleet(router: str, scheduler: str,
                     preemptions: int = 0,
                     preempt_by_replica: Optional[Dict[int, int]] = None,
                     prefix_by_replica: Optional[
-                        Dict[int, Tuple[int, int, int, int]]] = None
+                        Dict[int, Tuple[int, int, int, int]]] = None,
+                    admitted_by_replica: Optional[Dict[int, int]] = None,
+                    shed_by_replica: Optional[
+                        Dict[int, List[Request]]] = None
                     ) -> FleetSummary:
     all_fin: List[Request] = [r for fin in finished_by_replica.values()
                               for r in fin]
@@ -151,14 +187,21 @@ def summarize_fleet(router: str, scheduler: str,
     pfx = prefix_by_replica or {}
     tot = [sum(v[i] for v in pfx.values()) for i in range(4)] \
         if pfx else [0, 0, 0, 0]
+    adm = admitted_by_replica or {}
+    shd = shed_by_replica or {}
+    all_shed: List[Request] = [r for s in shd.values() for r in s]
     fleet = summarize(f"{scheduler}@{router}", all_fin, service, makespan,
                       preemptions=preemptions,
                       prefill_tokens=tot[0], cached_tokens=tot[1],
-                      prefix_hits=tot[2], prefix_lookups=tot[3])
+                      prefix_hits=tot[2], prefix_lookups=tot[3],
+                      n_admitted=sum(adm.values()) if adm else None,
+                      shed=all_shed)
     pbr = preempt_by_replica or {}
     per_replica = {
         rid: summarize(f"{scheduler}@{router}/r{rid}", fin, service,
                        makespan, preemptions=pbr.get(rid, 0),
+                       n_admitted=adm.get(rid),
+                       shed=shd.get(rid),
                        **dict(zip(("prefill_tokens", "cached_tokens",
                                    "prefix_hits", "prefix_lookups"),
                                   pfx.get(rid, (0, 0, 0, 0)))))

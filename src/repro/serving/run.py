@@ -22,6 +22,12 @@ from repro.serving.metrics import (FleetSummary, Summary, summarize,
 from repro.serving.workload import WorkloadGen, WorkloadSpec
 
 
+def _service_aware(scheduler: str) -> bool:
+    """Schedulers whose ranking consumes the ServiceModel (gain/decay)."""
+    return (scheduler.startswith("tempo") and scheduler != "tempo-sjf") \
+        or scheduler.startswith("gmg")
+
+
 def make_backend(backend: Union[str, Backend, None],
                  backend_kwargs: Optional[Dict] = None) -> Backend:
     """Resolve the --backend axis: "sim" | "jax" | instance | None."""
@@ -49,7 +55,7 @@ def run_experiment(scheduler: str = "tempo",
     backend = make_backend(backend, backend_kwargs)
     service = service or ServiceModel()
     sk = dict(sched_kwargs or {})
-    if scheduler.startswith("tempo") and scheduler != "tempo-sjf":
+    if _service_aware(scheduler):
         sk.setdefault("service", service)
     sched = make_scheduler(scheduler, **sk)
 
@@ -63,13 +69,19 @@ def run_experiment(scheduler: str = "tempo",
     eng = ServeEngine(backend, sched, engine_cfg, workload=gen)
     eng.load(singles, dags)
     finished = eng.run()
+    # the denominator counts everything submitted: admitted (finished,
+    # live-at-truncation, shed), arrivals still queued when the run
+    # ended, and unspawned DAG stages — none may silently vanish from
+    # goodput_frac
+    n_submitted = eng.submitted_count
     return summarize(sched.name if hasattr(sched, "name") else scheduler,
                      finished, service, eng.now,
                      preemptions=eng.preempt_count,
                      prefill_tokens=eng.prefill_computed,
                      cached_tokens=eng.cached_tokens,
                      prefix_hits=eng.prefix_hits,
-                     prefix_lookups=eng.prefix_lookups)
+                     prefix_lookups=eng.prefix_lookups,
+                     n_admitted=n_submitted, shed=eng.shed)
 
 
 # ---------------------------------------------------------------------------
@@ -107,7 +119,7 @@ def run_cluster_experiment(scheduler: str = "tempo",
     backend_factory = backend_factory or (
         lambda rid: make_backend(backend, backend_kwargs))
     base_sk = dict(sched_kwargs or {})
-    if scheduler.startswith("tempo") and scheduler != "tempo-sjf":
+    if _service_aware(scheduler):
         base_sk.setdefault("service", service)
 
     gen = WorkloadGen(spec)
@@ -152,4 +164,10 @@ def run_cluster_experiment(scheduler: str = "tempo",
                                          rep.engine.cached_tokens,
                                          rep.engine.prefix_hits,
                                          rep.engine.prefix_lookups)
+                               for rep in cluster.replicas},
+                           admitted_by_replica={
+                               rep.rid: rep.engine.submitted_count
+                               for rep in cluster.replicas},
+                           shed_by_replica={
+                               rep.rid: rep.engine.shed
                                for rep in cluster.replicas})

@@ -1,0 +1,71 @@
+"""Goodput denominator regression: shed / never-finished requests must
+count as SLO misses instead of silently vanishing from goodput_frac."""
+
+import pytest
+
+from repro.core.service import ServiceModel
+from repro.serving.metrics import summarize, summarize_fleet
+from repro.serving.request import Request, SLOSpec
+
+
+def _fin(rid, ttlt=1.0, slo_ttlt=10.0):
+    r = Request(rid=rid, app="code", arrival=0.0, prompt_len=10,
+                true_output_len=5,
+                slo=SLOSpec("throughput", ttlt=slo_ttlt))
+    r.prefilled = 10
+    r.decoded = 5
+    r.first_token_t = 0.2
+    r.token_times = [0.2 * (i + 1) for i in range(5)]
+    r.finish_t = ttlt
+    return r
+
+
+def test_unfinished_count_as_misses():
+    svc = ServiceModel()
+    fin = [_fin(i) for i in range(8)]           # all meet their SLO
+    full = summarize("x", fin, svc, makespan=10.0)
+    assert full.goodput_frac == 1.0 and full.n_unfinished == 0
+    # same finished set, but 2 admitted requests never completed
+    trunc = summarize("x", fin, svc, makespan=10.0, n_admitted=10)
+    assert trunc.n_admitted == 10
+    assert trunc.n_unfinished == 2
+    assert trunc.goodput_frac == pytest.approx(8 / 10)
+
+
+def test_shed_requests_count_and_contribute_partial_gain():
+    svc = ServiceModel()
+    fin = [_fin(i) for i in range(4)]
+    dropped = Request(rid=99, app="chatbot", arrival=0.0, prompt_len=10,
+                      true_output_len=50, slo=SLOSpec("latency"))
+    dropped.prefilled = 10
+    dropped.decoded = 3                          # delivered 3 tokens...
+    dropped.first_token_t = 0.5
+    dropped.token_times = [0.5, 0.55, 0.6]       # ...then was shed
+    s = summarize("x", fin, svc, makespan=10.0, n_admitted=5,
+                  shed=[dropped])
+    assert s.n_shed == 1
+    assert s.goodput_frac == pytest.approx(4 / 5)     # shed = miss
+    only_fin = summarize("x", fin, svc, makespan=10.0)
+    assert s.service_gain > only_fin.service_gain     # partial gain kept
+    assert s.max_gain > only_fin.max_gain             # ...and owed gain
+
+
+def test_denominator_never_below_finished():
+    svc = ServiceModel()
+    fin = [_fin(i) for i in range(5)]
+    s = summarize("x", fin, svc, makespan=10.0, n_admitted=2)  # bogus input
+    assert s.n_admitted == 5
+    assert s.goodput_frac <= 1.0
+
+
+def test_fleet_threads_denominators():
+    svc = ServiceModel()
+    by_rep = {0: [_fin(1), _fin(2)], 1: [_fin(3)]}
+    f = summarize_fleet("rr", "tempo", by_rep, svc, makespan=10.0,
+                        admitted_by_replica={0: 3, 1: 2},
+                        shed_by_replica={1: []})
+    assert f.fleet.n_admitted == 5
+    assert f.fleet.n_unfinished == 2
+    assert f.fleet.goodput_frac == pytest.approx(3 / 5)
+    assert f.per_replica[0].goodput_frac == pytest.approx(2 / 3)
+    assert f.per_replica[1].goodput_frac == pytest.approx(1 / 2)

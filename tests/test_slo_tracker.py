@@ -1,0 +1,141 @@
+"""SpeedProfile mixed-step apportioning + batch-aware StepCostModel.
+
+The mixed-step regression: a step with BOTH prefill tokens and decode
+sequences used to charge the FULL step time to both EWMAs — inflating
+decode_step by the prefill time and deflating prefill_tps by the decode
+time.  Under chunked prefill almost every loaded step is mixed, so both
+profiles were systematically wrong, corrupting every margin/density
+estimate computed from them.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.slo_tracker import SLOTracker, SpeedProfile, StepCostModel
+from repro.serving.backend import SimBackend
+from repro.serving.request import Request, SLOSpec
+
+# ground truth used by the synthetic step streams
+TRUE_TPS = 40_000.0        # prefill tokens/s
+TRUE_DECODE = 0.010        # s per decode step
+
+
+def _mixed_step(prefill_tokens: int) -> float:
+    return prefill_tokens / TRUE_TPS + TRUE_DECODE
+
+
+def test_pure_steps_unchanged():
+    """Pure prefill / pure decode updates match the classic EWMA."""
+    a, b = SpeedProfile(), SpeedProfile()
+    # hand-rolled classic update
+    for _ in range(200):
+        a.update(0.01, 0, 8)
+        b.decode_step += b.ewma * (0.01 - b.decode_step)
+        b.samples += 1
+    assert a.decode_step == pytest.approx(b.decode_step)
+    a2, b2 = SpeedProfile(), SpeedProfile()
+    for _ in range(200):
+        a2.update(0.02, 1000, 0)
+        b2.prefill_tps += b2.ewma * (1000 / 0.02 - b2.prefill_tps)
+    assert a2.prefill_tps == pytest.approx(b2.prefill_tps)
+
+
+def test_mixed_steps_converge_to_truth():
+    """Interleaved mixed observations must converge to the true phase
+    speeds instead of double-attributing the step time."""
+    p = SpeedProfile()
+    for i in range(3000):
+        ptok = [512, 2048, 0, 1024][i % 4]
+        dsec = 0 if i % 7 == 0 else 16
+        t = (ptok / TRUE_TPS if ptok else 0.0) \
+            + (TRUE_DECODE if dsec else 0.0)
+        p.update(t, ptok, dsec)
+    assert p.decode_step == pytest.approx(TRUE_DECODE, rel=0.15)
+    assert p.prefill_tps == pytest.approx(TRUE_TPS, rel=0.15)
+
+
+def test_mixed_step_regression_no_double_attribution():
+    """THE bug: under a stream dominated by mixed steps (the common case
+    with chunked prefill) the old code converged decode_step to ~the WHOLE
+    mixed-step time (prefill included, ~5-6x true here) and prefill_tps to
+    prompt/(whole step).  The apportioned update, anchored by the
+    occasional pure-decode step, must converge both to the truth."""
+    p = SpeedProfile()
+    ptok = 2048
+    t = _mixed_step(ptok)          # 0.0512 + 0.010 = 0.0612 s
+    for i in range(4000):
+        if i % 8 == 7:             # sporadic decode-only step (no prefill
+            p.update(TRUE_DECODE, 0, 32)   # queued) anchors the split
+        else:
+            p.update(t, ptok, 32)
+    # old code: decode_step -> ~0.055 (5.5x true); prefill_tps -> ~33k
+    assert p.decode_step < 0.5 * t          # decode got only its share
+    assert p.decode_step == pytest.approx(TRUE_DECODE, rel=0.2)
+    assert p.prefill_tps == pytest.approx(TRUE_TPS, rel=0.2)
+
+
+def test_cost_model_recovers_sim_backend():
+    """The ridge fit must reproduce the roofline step-time model it
+    observes — including compositions it never saw verbatim."""
+    be = SimBackend.for_model("llama-8b")
+    m = StepCostModel()
+    rng = np.random.default_rng(0)
+    for _ in range(400):
+        ptok = int(rng.choice([0, 128, 512, 2048]))
+        d = int(rng.integers(0, 48))
+        ctxs = rng.integers(64, 4096, d)
+        t = be.step_time(ptok, list(ctxs))
+        m.observe(t, ptok, d, float(ctxs.sum()))
+    assert m.fitted and m.fits >= 1
+    for ptok, d, ctx in [(0, 8, 4096), (0, 40, 90_000), (1024, 16, 20_000),
+                         (2048, 0, 0), (0, 1, 100)]:
+        per = [ctx // d] * d if d else []
+        true = be.step_time(ptok, per)
+        assert m.predict(ptok, d, ctx) == pytest.approx(true, rel=0.05), \
+            (ptok, d, ctx)
+
+
+def test_cost_model_prices_marginal_batch_growth():
+    """Adding a sequence must cost ~its context's HBM read — the marginal
+    cost the grouped-margin batch-composition rule divides by."""
+    be = SimBackend.for_model("llama-8b")
+    m = StepCostModel()
+    rng = np.random.default_rng(1)
+    for _ in range(400):
+        d = int(rng.integers(1, 48))
+        ctxs = rng.integers(64, 4096, d)
+        m.observe(be.step_time(0, list(ctxs)), 0, d, float(ctxs.sum()))
+    base = m.predict(0, 16, 32_000)
+    grown = m.predict(0, 17, 34_000)
+    true = be.step_time(0, [2000] * 17) - be.step_time(0, [2000] * 16)
+    assert grown - base == pytest.approx(true, rel=0.25)
+
+
+def test_tracker_batched_remaining_time():
+    tr = SLOTracker()
+    be = SimBackend.for_model("llama-8b")
+    for d in range(1, 60):
+        ctxs = [1000] * d
+        tr.on_step(be.step_time(0, ctxs), 0, d, float(sum(ctxs)))
+    for _ in range(60):
+        tr.on_step(be.step_time(1024, [1000] * 8), 1024, 8, 8000.0)
+    r = Request(rid=1, app="chatbot", arrival=0.0, prompt_len=100,
+                true_output_len=400, slo=SLOSpec("throughput"))
+    r.prefilled = 100
+    small = tr.est_remaining_time(r, 400.0, decode_seqs=4,
+                                  ctx_total=2_000.0)
+    big = tr.est_remaining_time(r, 400.0, decode_seqs=48,
+                                ctx_total=200_000.0)
+    assert big > small                      # bigger batch -> slower steps
+    # scalar fallback still works and is in the same ballpark
+    scal = tr.est_remaining_time(r, 400.0)
+    assert scal > 0
+
+
+def test_tracker_unfitted_fallback():
+    """Before any observations the batched API must fall back to the
+    scalar profile, not crash or return zero."""
+    tr = SLOTracker()
+    t = tr.est_step_time(8, 8_000.0)
+    assert t == pytest.approx(tr.profile.decode_step)
+    assert tr.est_decode_time(100.0, 8, 8_000.0) > 0
