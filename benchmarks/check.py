@@ -1,0 +1,124 @@
+"""Generalized bench-regression gate (CI): rerun every benchmark that has
+a committed baseline under ``experiments/bench/*.json`` and compare the
+fresh rows against the baseline within per-metric tolerances.
+
+Row identity is the tuple of whatever ID fields a row carries
+(scheduler / workload / backend / router / scenario / ...), so the gate
+generalizes to any bench that persists rows through ``benchmarks.common
+.save``.  Gated metrics are the bounded, machine-independent goodput
+fractions; rows produced on the real-jax backend get a looser tolerance
+(their schedulers act on measured wall-clock step times, so scheduling —
+though not token content — varies with runner load).  Timing fields
+(wall_s, makespan, tok_s, interpret_ms, service_gain on jax) are never
+gated.
+
+Used by ``python -m benchmarks.run --check`` (which also applies
+``benchmarks.gmg.check``'s relational gmg >= tempo gate when the gmg
+bench is in the run set).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+from benchmarks.common import RESULTS_DIR
+
+# fields that IDENTIFY a row (used when present; order fixed)
+ID_FIELDS = ("bench", "kernel", "scheduler", "workload", "backend",
+             "router", "scenario", "prefix_cache", "n_replicas", "shape",
+             "tp")
+
+# metric -> (abs tolerance, abs tolerance for jax-backend rows; None = skip)
+GATES = {
+    "goodput_frac": (0.02, 0.15),
+    "gain_frac": (0.02, None),
+    "prefix_hit_rate": (0.05, 0.15),
+}
+
+
+def row_key(row: Dict) -> Tuple:
+    return tuple((f, str(row[f])) for f in ID_FIELDS if f in row)
+
+
+def _is_jax(row: Dict) -> bool:
+    return (row.get("backend") == "jax"
+            or "jax" in str(row.get("bench", ""))
+            or str(row.get("scheduler", "")).endswith("@jax"))
+
+
+def baseline_names() -> List[str]:
+    """Bench names with a committed baseline JSON."""
+    if not os.path.isdir(RESULTS_DIR):
+        return []
+    return sorted(os.path.splitext(f)[0] for f in os.listdir(RESULTS_DIR)
+                  if f.endswith(".json"))
+
+
+def load_baseline(name: str) -> Optional[List[Dict]]:
+    path = os.path.join(RESULTS_DIR, name + ".json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_rows(name: str, fresh: List[Dict],
+               baseline: List[Dict]) -> List[str]:
+    """Compare one bench's fresh rows against its baseline.  Returns
+    failure strings (empty = pass).  A baseline row with no fresh
+    counterpart is a failure (coverage must not silently shrink); a
+    fresh row with no baseline counterpart is fine (new coverage — the
+    uploaded artifact becomes the next baseline when committed)."""
+    failures: List[str] = []
+    fresh_by_key = {row_key(r): r for r in fresh}
+    for base in baseline:
+        key = row_key(base)
+        got = fresh_by_key.get(key)
+        if got is None:
+            failures.append(f"{name}: baseline row {dict(key)} missing "
+                            "from fresh run")
+            continue
+        jax_row = _is_jax(base)
+        for metric, (tol, jax_tol) in GATES.items():
+            if metric not in base or metric not in got:
+                continue
+            use = jax_tol if jax_row else tol
+            if use is None:
+                continue
+            try:
+                b, g = float(base[metric]), float(got[metric])
+            except (TypeError, ValueError):
+                continue
+            if abs(g - b) > use:
+                failures.append(
+                    f"{name}: {metric} {g:.4f} vs baseline {b:.4f} "
+                    f"(tol {use}) for {dict(key)}")
+    return failures
+
+
+def check_all(fresh_by_bench: Dict[str, List[Dict]],
+              baselines: Optional[Dict[str, List[Dict]]] = None) -> int:
+    """Gate every bench in ``fresh_by_bench`` that has a baseline.
+    Pass ``baselines`` preloaded when the fresh run has already
+    overwritten the JSON files on disk (benchmarks.run --check snapshots
+    them before running).  Prints a verdict per bench; returns a process
+    exit code."""
+    failures: List[str] = []
+    for name, rows in sorted(fresh_by_bench.items()):
+        baseline = (baselines or {}).get(name)
+        if baseline is None:
+            baseline = load_baseline(name)
+        if baseline is None:
+            print(f"[check:{name}] no committed baseline — skipped "
+                  "(fresh JSON uploaded as artifact)")
+            continue
+        fails = check_rows(name, rows, baseline)
+        print(f"[check:{name}] {len(baseline)} baseline rows, "
+              f"{len(rows)} fresh rows: "
+              + ("OK" if not fails else f"{len(fails)} REGRESSIONS"))
+        failures.extend(fails)
+    for f in failures:
+        print(f"REGRESSION: {f}")
+    return 1 if failures else 0

@@ -55,10 +55,13 @@ def cluster_sweep(quick: bool = True) -> List[dict]:
     return rows
 
 
-def cluster_jax(quick: bool = True) -> List[dict]:
+def cluster_jax(quick: bool = True, tp: int = 1) -> List[dict]:
     """2-replica cluster on REAL execution: every replica decodes a reduced
     model on its own paged device KV cache; routers and autoscaler see the
-    same interface as the simulator (Backend protocol, DESIGN.md §2)."""
+    same interface as the simulator (Backend protocol, DESIGN.md §2).
+    ``tp`` > 1 makes it N replicas × tp-way device meshes (each replica a
+    distinct device slice; needs >= 2·tp local devices to avoid overlap)."""
+    from repro.serving.engine import EngineConfig
     spec = WorkloadSpec(rate=1.5, duration=4.0 if quick else 12.0, seed=1,
                         mix=(2, 1, 1), prompt_cap=40, output_cap=12,
                         slo_scale=20.0)
@@ -67,10 +70,12 @@ def cluster_jax(quick: bool = True) -> List[dict]:
         t0 = time.time()
         f = run_cluster_experiment(
             "tempo", router=router, n_replicas=2, spec=spec, warmup=64,
-            backend="jax",
+            backend="jax", engine_cfg=EngineConfig(tp=tp),
             backend_kwargs=dict(num_blocks=48, page=16, max_len=64))
         row = f.row()
         row.update(bench="cluster_jax", wall_s=round(time.time() - t0, 1))
+        if tp > 1:
+            row["tp"] = tp
         rows.append(row)
     return rows
 

@@ -60,7 +60,11 @@ def _sweep(workloads: Dict[str, WorkloadSpec], schedulers: List[str],
     return rows
 
 
-def gmg_goodput(quick: bool = True) -> List[Dict]:
+def gmg_goodput(quick: bool = True, tp: int = 1) -> List[Dict]:
+    """``tp`` > 1 runs the real-jax sweep tensor-parallel over a tp-way
+    device mesh (token streams are tp-invariant; only wall time moves).
+    Rows gain a ``tp`` key only when sharded so baseline identity is
+    unchanged at the default."""
     dur = MIXED["duration"] if quick else 120.0
     sim_workloads = {
         "chat": WorkloadSpec(rate=14.0, duration=dur, seed=3, mix=(1, 0, 0)),
@@ -71,11 +75,15 @@ def gmg_goodput(quick: bool = True) -> List[Dict]:
     }
     rows = _sweep(sim_workloads, SCHEDS)
     # real execution: same engine/schedulers on actual jax decoding
-    rows += _sweep({"mixed": WorkloadSpec(**JAX_SPEC)},
-                   ["vllm", "tempo", "gmg"], backend="jax",
-                   engine_cfg=EngineConfig(**JAX_ENGINE),
-                   backend_kwargs=dict(JAX_BACKEND), warmup=128)
-    return rows
+    jax_backend = dict(JAX_BACKEND, tp=tp) if tp > 1 else dict(JAX_BACKEND)
+    jax_rows = _sweep({"mixed": WorkloadSpec(**JAX_SPEC)},
+                      ["vllm", "tempo", "gmg"], backend="jax",
+                      engine_cfg=EngineConfig(**JAX_ENGINE, tp=tp),
+                      backend_kwargs=jax_backend, warmup=128)
+    if tp > 1:
+        for r in jax_rows:
+            r["tp"] = tp
+    return rows + jax_rows
 
 
 ALL = {"gmg": gmg_goodput}

@@ -4,11 +4,21 @@ benchmarks/paper_figs.py) plus the kernel micro-bench.  Prints
 experiments/bench/.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig13_load] [--full]
+  PYTHONPATH=src python -m benchmarks.run --check      # CI regression gate
+  PYTHONPATH=src python -m benchmarks.run --tp 2 ...   # jax benches on a
+                                                       # 2-device mesh
+
+--check reruns every bench with a committed baseline JSON under
+experiments/bench/ and gates the fresh rows against it within tolerance
+(benchmarks/check.py), plus the relational gmg >= tempo gate
+(benchmarks/gmg.py) when gmg is in the run set.  Fresh JSONs are written
+regardless, so CI can upload them as artifacts.
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
@@ -55,8 +65,15 @@ def main() -> None:
     ap.add_argument("--only", default="")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale durations (slower)")
+    ap.add_argument("--check", action="store_true",
+                    help="regression gate: run the benches that have "
+                    "committed baselines and compare within tolerance")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel mesh degree for benches that "
+                    "run the jax backend (needs >= tp local devices)")
     args = ap.parse_args()
 
+    from benchmarks import check as checkmod
     from benchmarks.common import save
     from benchmarks.cluster_sweep import ALL as CLUSTER
     from benchmarks.gmg import ALL as GMG
@@ -69,15 +86,38 @@ def main() -> None:
     benches.update(GMG)
     benches["kernels"] = lambda quick=True: _kernel_bench()
     names = [n for n in benches if (not args.only or args.only in n)]
+    baselines = {}
+    if args.check and args.tp > 1:
+        # tp>1 tags jax rows with a 'tp' identity key, so they can never
+        # match the committed (tp=1) baselines — and the run would
+        # overwrite those baselines on disk before failing
+        ap.error("--check compares against the committed tp=1 baselines; "
+                 "run --tp sweeps without --check")
+    if args.check:
+        # gate scope: benches with a committed baseline (∩ --only filter);
+        # snapshot the baselines NOW — save() below overwrites the files
+        # with fresh rows (which CI uploads as artifacts)
+        with_baseline = set(checkmod.baseline_names())
+        names = [n for n in names if n in with_baseline]
+        if not names:
+            print("check: no benches with committed baselines matched")
+            sys.exit(1)
+        baselines = {n: checkmod.load_baseline(n) for n in names}
 
     t_all = time.time()
+    fresh = {}
     for name in names:
         t0 = time.time()
+        fn = benches[name]
+        kw = {"quick": not args.full}
+        if args.tp > 1 and "tp" in inspect.signature(fn).parameters:
+            kw["tp"] = args.tp
         try:
-            rows = benches[name](quick=not args.full)
+            rows = fn(**kw)
         except Exception as e:  # pragma: no cover
             print(f"{name},ERROR,{e!r}", flush=True)
             raise
+        fresh[name] = rows
         save(name, rows)
         for r in rows:
             kv = ",".join(f"{k}={v}" for k, v in r.items()
@@ -85,6 +125,13 @@ def main() -> None:
             print(f"{name},{kv}", flush=True)
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
     print(f"# all benchmarks done in {time.time()-t_all:.1f}s", flush=True)
+
+    if args.check:
+        code = checkmod.check_all(fresh, baselines)
+        if "gmg" in fresh:
+            from benchmarks.gmg import check as gmg_check
+            code = gmg_check(fresh["gmg"]) or code
+        sys.exit(code)
 
 
 if __name__ == "__main__":

@@ -14,22 +14,40 @@ vLLM-style FCFS.
 a reduced model decoding on a device-resident paged KV cache (Pallas
 paged attention, interpret mode on CPU) — over a length-capped workload
 that fits the device page pool.  Step times are measured wall time.
+
+--tp N (jax backend): execute tensor-parallel over an N-device ('model',)
+mesh — Megatron-sharded weights, KV-head-sharded page pool, all-reduced
+partial sums (DESIGN.md §8).  Token streams are identical to --tp 1; the
+printed ``stream-digest`` lines make that checkable from the console
+(CI diffs them across --tp 1/2/4).  On CPU set
+XLA_FLAGS=--xla_force_host_platform_device_count=8 to simulate devices.
 """
 
 import argparse
+import hashlib
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.serving.engine import EngineConfig                # noqa: E402
-from repro.serving.run import run_experiment                 # noqa: E402
+from repro.serving.run import make_backend, run_experiment   # noqa: E402
 from repro.serving.workload import WorkloadSpec              # noqa: E402
+
+
+def _stream_digest(backend) -> str:
+    """Order-independent digest of every request's generated tokens."""
+    streams = sorted((rid, tuple(toks))
+                     for rid, toks in backend.generated.items())
+    return hashlib.sha256(repr(streams).encode()).hexdigest()[:16]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", choices=("sim", "jax"), default="sim")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree of the jax replica's "
+                    "device mesh (ignored by --backend sim)")
     ap.add_argument("--scheduler", default=None,
                     help="serve ONLY this scheduler (e.g. gmg, tempo) "
                     "instead of the default comparison set")
@@ -58,9 +76,10 @@ def main() -> None:
                                 shared_system_frac=1.0, prompt_cap=8,
                                 output_cap=4, slo_scale=50.0)
         engine_cfg = EngineConfig(max_batch=8, prefill_budget=32,
-                                  prefix_cache=args.prefix_cache)
+                                  prefix_cache=args.prefix_cache,
+                                  tp=args.tp)
         backend_kwargs = dict(arch="tinyllama-1.1b", num_blocks=64,
-                              page=16, max_len=128, seed=0)
+                              page=16, max_len=128, seed=0, tp=args.tp)
         schedulers = ("vllm", "tempo")
     else:
         if args.scenario == "mixed":
@@ -79,8 +98,12 @@ def main() -> None:
     print(f"{'scheduler':<16} {'gain':>12} {'goodput':>9} {'tok/s':>9} "
           f"{'lat met':>8} {'thr met':>8} {'coll met':>9} {'cached':>7}")
     for name in schedulers:
+        # build the backend explicitly (fresh per scheduler) so the real
+        # token streams are digestable after the run
+        backend = make_backend(args.backend, backend_kwargs) \
+            if args.backend == "jax" else args.backend
         s = run_experiment(name, spec=spec, engine_cfg=engine_cfg,
-                           backend=args.backend,
+                           backend=backend,
                            backend_kwargs=backend_kwargs)
         pt = s.per_type
         get = lambda k: pt.get(k, {}).get("slo_met", float("nan"))
@@ -93,12 +116,18 @@ def main() -> None:
         if args.scenario != "mixed" and args.prefix_cache:
             assert s.prefix_hits > 0, \
                 f"{name}@{args.backend}: prefix cache never hit"
+        if args.backend == "jax":
+            # tp-invariant by construction: CI diffs these lines across
+            # --tp 1/2/4 to enforce sharded == single-device execution
+            print(f"stream-digest {name} {_stream_digest(backend)}")
 
     if args.backend == "jax":
+        extra = (f" (tensor-parallel over a {args.tp}-device mesh)"
+                 if args.tp > 1 else "")
         print("\nReal JAX execution behind the Backend protocol: the same "
               "run loop, schedulers, KV accounting, eviction — and "
               "prefix-cache COW sharing — drive an actual model decoding "
-              "on a paged device KV cache.")
+              f"on a paged device KV cache{extra}.")
     else:
         print("\nTempo allocates just-enough bandwidth per SLO (paced "
               "streaming, deadline-pressure density, stage-budgeted DAGs) "

@@ -56,6 +56,13 @@ class Replica:
         free — a replica full of cold cache is NOT under pressure."""
         return 1.0 - self.engine.kv.available_frac
 
+    def kv_free_tokens(self) -> int:
+        """ABSOLUTE KV headroom (tokens) — the replica's mesh-wide
+        aggregate pool (DESIGN.md §8: a tp-sharded replica hosts tp× the
+        pages per device budget), so routers can prefer the bigger mesh
+        in a heterogeneous fleet even at equal utilisation fractions."""
+        return self.engine.kv.free_tokens()
+
 
 class ClusterEngine:
     def __init__(self, replica_factory: Callable[[int], ServeEngine],

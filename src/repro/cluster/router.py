@@ -81,9 +81,13 @@ class LeastKVPressureRouter(Router):
     name = "least-kv"
 
     def route(self, kind: str, obj, replicas: List, now: float):
+        # fraction first (pressure), then absolute mesh-wide headroom so a
+        # heterogeneous fleet (e.g. mixed-tp jax replicas) prefers the
+        # bigger aggregate pool at equal utilisation
         return min(replicas,
-                   key=lambda rep: (rep.kv_used_frac(), rep.queue_len(),
-                                    rep.rid))
+                   key=lambda rep: (rep.kv_used_frac(),
+                                    -rep.kv_free_tokens(),
+                                    rep.queue_len(), rep.rid))
 
 
 # ---------------------------------------------------------------------------

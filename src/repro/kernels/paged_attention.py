@@ -11,6 +11,13 @@ TPU adaptation recorded in DESIGN.md §3).  Grid: (batch, n_pages_max); VMEM
 scratch carries online-softmax state across pages; tokens past the sequence's
 context length are masked.  Working set per step: one page (128×KV×D) + q
 (H×D) + acc (H×D) f32 ≈ 0.8 MB at KV=8, D=128 — comfortably inside VMEM.
+
+Tensor parallelism (DESIGN.md §8): these kernels are shard-local.  Under
+the serving shard_map each device calls them with its KV-head slice of
+the page pool and the matching q-head slice (whole GQA groups per shard,
+so G = H/KV is shard-invariant); the per-head online softmax needs no
+cross-shard communication — the single all-reduce lives AFTER the wo
+projection in models/attention.py.
 """
 
 from __future__ import annotations

@@ -153,6 +153,95 @@ def opt_shardings(cfg: ModelConfig, mesh: Mesh, opt_tree):
 
 
 # ---------------------------------------------------------------------------
+# Serving-side tensor parallelism for the paged path (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+# The paged serving entry points run under shard_map over a 1-D ('model',)
+# mesh of tp devices; these specs say how each resident leaf is split.
+# Megatron-style: attention projections shard the HEAD dim (q heads stay
+# grouped with their kv head — H = KV·G, so KV % tp == 0 keeps every GQA
+# group on one shard and the Pallas kernel runs unchanged on local heads),
+# the MLP shards d_ff column/row-wise, and lm_head shards vocab (gathered
+# exactly, no reduction).  Any subsystem whose dim doesn't divide falls
+# back to replication — correctness never depends on divisibility.
+_PAGED_TP_ATTN = {"wq": 1, "wk": 1, "wv": 1,   # (d, H|KV, hd) -> heads
+                  "wo": 0}                     # (H, hd, d)    -> heads
+_PAGED_TP_MLP = {"w_gate": 1, "w_up": 1,       # (d, f)  -> f
+                 "w_down": 0}                  # (f, d)  -> f
+
+
+def paged_tp_plan(cfg: ModelConfig, tp: int) -> dict:
+    """Which subsystems actually shard at this tp degree.
+
+    attn  — KV heads (and with them the paged KV pool + q-head groups)
+            split over 'model'; needs num_kv_heads % tp == 0 (H % tp == 0
+            follows, H = KV·G).
+    mlp   — d_ff split over 'model' (dense MLP only; MoE experts stay
+            replicated on the serving mesh).
+    vocab — lm_head columns split over 'model'.
+    """
+    if tp <= 1:
+        return dict(tp=max(tp, 1), attn=False, mlp=False, vocab=False)
+    return dict(
+        tp=tp,
+        attn=cfg.num_kv_heads % tp == 0,
+        mlp=cfg.d_ff > 0 and cfg.num_experts == 0 and cfg.d_ff % tp == 0,
+        vocab=cfg.vocab_padded % tp == 0)
+
+
+def paged_param_specs(cfg: ModelConfig, tp: int, params_tree):
+    """PartitionSpec pytree for resident serving weights under the plan.
+    Works on arrays or ShapeDtypeStructs (only .ndim is consulted)."""
+    plan = paged_tp_plan(cfg, tp)
+
+    def f(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = keys[-1]
+        stacked = "units" in keys
+        nd = leaf.ndim - (1 if stacked else 0)
+        dim = None
+        if plan["attn"] and name in _PAGED_TP_ATTN:
+            dim = _PAGED_TP_ATTN[name]
+        elif plan["mlp"] and name in _PAGED_TP_MLP:
+            dim = _PAGED_TP_MLP[name]
+        elif plan["vocab"] and name == "lm_head":
+            dim = 1
+        spec = [None] * nd
+        if dim is not None and dim < nd:
+            spec[dim] = "model"
+        return P(*([None] + spec)) if stacked else P(*spec)
+
+    return jax.tree_util.tree_map_with_path(f, params_tree)
+
+
+def paged_page_specs(cfg: ModelConfig, tp: int, pages_tree):
+    """PartitionSpec pytree for the paged KV pool: every leaf is a k/v
+    page pool (num_pages, page, KV, hd) — stacked units add a leading
+    num_units dim — and the KV-head dim (ndim-2) shards over 'model' when
+    the plan shards attention, else the pool replicates per device."""
+    plan = paged_tp_plan(cfg, tp)
+
+    def f(leaf):
+        spec = [None] * leaf.ndim
+        if plan["attn"]:
+            spec[leaf.ndim - 2] = "model"
+        return P(*spec)
+
+    return jax.tree.map(f, pages_tree)
+
+
+def serving_tp_ctx(cfg: ModelConfig, tp: int, *, axis: str = "model",
+                   attn_chunk: int = 1024) -> AxisCtx:
+    """AxisCtx for model code running INSIDE the serving shard_map: mesh
+    stays None (sharding constraints are no-ops there); the tp_* axes tell
+    attention / MLP / lm_head which collectives to insert."""
+    plan = paged_tp_plan(cfg, tp)
+    return AxisCtx(phase="decode", attn_chunk=attn_chunk,
+                   tp_attn_axis=axis if plan["attn"] else None,
+                   tp_mlp_axis=axis if plan["mlp"] else None,
+                   tp_vocab_axis=axis if plan["vocab"] else None)
+
+
+# ---------------------------------------------------------------------------
 # Cache + input specs
 # ---------------------------------------------------------------------------
 def cache_pspec(ctx: AxisCtx, path, shape) -> P:

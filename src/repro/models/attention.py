@@ -157,8 +157,13 @@ def gqa_apply(x, p, cfg, ctx, mode, cache=None, index=None):
 # ---------------------------------------------------------------------------
 # GQA over a paged KV cache (real serving path; DESIGN.md §3)
 # ---------------------------------------------------------------------------
-def gqa_prefill_paged(x, p, cfg, pages, block_table, start, n):
+def gqa_prefill_paged(x, p, cfg, pages, block_table, start, n, ctx=None):
     """Chunked-prefill attention for ONE sequence against paged KV.
+
+    Under serving TP (DESIGN.md §8) this body runs inside a shard_map:
+    ``p`` holds the LOCAL head slice (wq/wk/wv sharded on the head dim, wo
+    on its head rows), ``pages`` the local KV-head slice of the pool, and
+    the wo projection's partial sum is all-reduced via ``ctx.psum_attn``.
 
     x: (1, C, D) chunk hidden states — rows at or past ``n`` are padding
     (chunks are padded to a few static shapes to bound recompiles); their
@@ -171,7 +176,10 @@ def gqa_prefill_paged(x, p, cfg, pages, block_table, start, n):
     Returns (out (1, C, D), new pages)."""
     from repro.kernels.paged_attention import paged_gather, paged_kv_append
     B, C, D = x.shape
-    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    # head counts come from the (possibly head-sharded) weights, NOT cfg:
+    # inside the TP shard_map each shard sees H/tp query heads and KV/tp
+    # kv heads, with whole GQA groups kept together (G is shard-invariant)
+    H, KV, Dh = p["wq"].shape[1], p["wk"].shape[1], p["wq"].shape[2]
     G = H // KV
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
@@ -195,21 +203,26 @@ def gqa_prefill_paged(x, p, cfg, pages, block_table, start, n):
     o = jnp.einsum("bckgl,lkd->bckgd", w, vals.astype(jnp.float32))
     o = o.reshape(B, C, H, Dh)
     out = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["wo"])
+    if ctx is not None:
+        out = ctx.psum_attn(out)
     return out, {"k": kp, "v": vp}
 
 
 def gqa_decode_paged(x, p, cfg, pages, block_tables, positions, *,
-                     interpret=False):
+                     interpret=False, ctx=None):
     """Batched one-token decode against paged KV via the Pallas kernel.
 
     x: (B, 1, D); block_tables: (B, n_max); positions: (B,) — the slot the
     new token's KV occupies (context length BEFORE this token).  Each
     sequence decodes at its own position; rope is applied per-sequence.
+    Under serving TP the kernel runs per-shard on the local KV-head slice
+    of the pool (per-head online softmax is shard-local — no cross-shard
+    reduction until wo, whose partial sums ``ctx.psum_attn`` all-reduces).
     Returns (out (B, 1, D), new pages)."""
     from repro.kernels.paged_attention import (paged_attention,
                                                paged_kv_append_batch)
     B, _, D = x.shape
-    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    H, Dh = p["wq"].shape[1], p["wq"].shape[2]
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
@@ -223,6 +236,8 @@ def gqa_decode_paged(x, p, cfg, pages, block_tables, positions, *,
                         (positions + 1).astype(jnp.int32),
                         scale=Dh ** -0.5, interpret=interpret)   # (B, H, Dh)
     out = jnp.einsum("bhk,hkd->bd", o.astype(x.dtype), p["wo"])[:, None, :]
+    if ctx is not None:
+        out = ctx.psum_attn(out)
     return out, {"k": kp, "v": vp}
 
 

@@ -63,7 +63,9 @@ def sinusoidal_embedding(positions, d_model: int):
 def mlp(x, p, ctx):
     h = silu(x @ p["w_gate"]) * (x @ p["w_up"])
     h = ctx.cs(h, ctx.batch, ctx.seq, None)
-    return h @ p["w_down"]
+    # under serving TP w_gate/w_up are column- and w_down row-sharded on
+    # d_ff; each shard's down-projection is a partial sum (no-op otherwise)
+    return ctx.psum_mlp(h @ p["w_down"])
 
 
 # ---------------------------------------------------------------------------

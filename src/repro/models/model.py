@@ -304,7 +304,10 @@ class Model:
                      *, interpret: bool = False):
         """One batched decode step: tokens (B,1) i32 at per-sequence write
         positions (B,); block_tables (B, n_max).  Returns (logits (B, V),
-        new pages)."""
+        new pages).  Under serving TP (ctx.tp_vocab_axis set) lm_head is
+        vocab-column-sharded; the local logit slices are all-gathered —
+        a pure concatenation, every column computed exactly as on one
+        device — before the vocab-size slice."""
         x = self._embed(params, {"tokens": tokens}, "decode", index=0)
         x, new_pages = stack_apply_paged(x, params, self.cfg, self.ctx,
                                          "decode", pages, block_tables,
@@ -312,6 +315,7 @@ class Model:
         x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
         logits = jnp.einsum("bd,dv->bv", x[:, 0], params["lm_head"],
                             preferred_element_type=jnp.float32)
+        logits = self.ctx.gather_vocab(logits)
         return logits[..., :self.cfg.vocab_size], new_pages
 
     # ------------------------------------------------------------------

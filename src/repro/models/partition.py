@@ -61,6 +61,14 @@ class AxisCtx:
     attn_schedule: str = "rect"       # rect | triangle (see attention.py)
     attn_chunk: int = 1024            # kv chunk for online-softmax scan
     seq_shard_states: bool = True     # shard recurrent states / caches
+    # Serving-side tensor parallelism (DESIGN.md §8): the paged prefill /
+    # decode entry points run INSIDE a shard_map, so `mesh` stays None
+    # (with_sharding_constraint is a no-op there) and these name the mapped
+    # mesh axis each subsystem all-reduces over.  None = that subsystem is
+    # replicated on this mesh (e.g. num_kv_heads % tp != 0 fallback).
+    tp_attn_axis: Optional[str] = None    # psum after the wo projection
+    tp_mlp_axis: Optional[str] = None     # psum after the w_down projection
+    tp_vocab_axis: Optional[str] = None   # all-gather vocab-sharded logits
 
     def cs(self, x, *dims):
         """with_sharding_constraint by logical dims.  For each dim the longest
@@ -82,6 +90,29 @@ class AxisCtx:
         if self.mesh is None or not self.seq:
             return 1
         return _axis_size(self.mesh, self.seq)
+
+    # -- serving-TP collectives (valid only inside shard_map) ----------
+    def psum_attn(self, x):
+        """All-reduce attention-output partial sums (wo is row-sharded
+        over heads, so each shard holds a partial projection)."""
+        if self.tp_attn_axis is None:
+            return x
+        return jax.lax.psum(x, self.tp_attn_axis)
+
+    def psum_mlp(self, x):
+        """All-reduce MLP down-projection partial sums (w_down is
+        row-sharded over d_ff)."""
+        if self.tp_mlp_axis is None:
+            return x
+        return jax.lax.psum(x, self.tp_mlp_axis)
+
+    def gather_vocab(self, logits):
+        """Reassemble vocab-sharded logits; exact (pure concatenation of
+        columns each computed as on one device — no reduction)."""
+        if self.tp_vocab_axis is None:
+            return logits
+        return jax.lax.all_gather(logits, self.tp_vocab_axis,
+                                  axis=logits.ndim - 1, tiled=True)
 
 
 NULL_CTX = AxisCtx()

@@ -89,10 +89,11 @@ def layer_apply_paged(x, lp, mixer, ffn, cfg, ctx, mode, pages, tables, pos,
     h = rms_norm(x, lp["ln1"], cfg.norm_eps)
     if mode == "prefill":
         mix_out, new_pages = gqa_prefill_paged(h, lp, cfg, pages, tables,
-                                               pos, n)
+                                               pos, n, ctx=ctx)
     else:
         mix_out, new_pages = gqa_decode_paged(h, lp, cfg, pages, tables,
-                                              pos, interpret=interpret)
+                                              pos, interpret=interpret,
+                                              ctx=ctx)
     x = ctx.hidden(x + mix_out)
     if ffn != "none":
         h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)

@@ -43,6 +43,11 @@ class EngineConfig:
     kv_blocks: int = 8192             # × 128 tokens ≈ 1M tokens of KV
     swap_bw: float = 60e9
     max_steps: int = 2_000_000
+    # tensor-parallel degree of the replica's device mesh (DESIGN.md §8).
+    # Threaded into PagedJaxBackend by the runners; the sim backend models
+    # its chips explicitly and ignores it.  A KV-head-sharded replica's
+    # pool is the mesh-wide aggregate (num_blocks scales ×tp).
+    tp: int = 1
     fail_at: Optional[float] = None   # fault-tolerance drill (serve.py)
     # shared-prefix KV reuse (DESIGN.md §6).  Safe to leave on: requests
     # without meta['prompt_tokens'] have no prefix identity and bypass the
@@ -63,12 +68,20 @@ class ServeEngine:
         self.workload = workload
         # Block geometry follows the backend when it manages a real device
         # page pool (PagedJaxBackend); otherwise EngineConfig/defaults.
+        # num_blocks/kv_bytes are the replica's MESH-WIDE aggregate: a
+        # tp-sharded backend reports a pool tp× its per-device page budget
+        # (each device holds a KV-head slice of every page), so EngineView
+        # and the cluster's pressure signals price the whole mesh.
         self.kv = BlockManager(
             getattr(backend, "num_blocks", None) or self.cfg.kv_blocks,
             block_tokens=getattr(backend, "block_tokens", None)
             or BLOCK_TOKENS,
             kv_bytes_per_token=getattr(backend, "kv_bytes",
-                                       KV_BYTES_PER_TOKEN))
+                                       KV_BYTES_PER_TOKEN),
+            # the PAGE-split factor, not the mesh degree: a replicated-KV
+            # fallback mesh (tp>1, kv_shard_degree=1) holds full pages
+            # per device, so per-device block bytes must not shrink
+            tp=getattr(backend, "kv_shard_degree", None) or self.cfg.tp)
         self.requests: Dict[int, Request] = {}
         self.dags: Dict[int, CollectiveDag] = {}
         self.finished: List[Request] = []

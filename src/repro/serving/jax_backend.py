@@ -24,19 +24,35 @@ byte-identical continuations.
 Sampling is seeded temperature/top-k keyed per (rid, position) — token
 streams are reproducible under a fixed seed regardless of batch
 composition (greedy argmax at temperature 0).
+
+Tensor parallelism (DESIGN.md §8): ``tp > 1`` executes every step under a
+``shard_map`` over a 1-D ``('model',)`` mesh of ``tp`` devices.  Resident
+weights shard Megatron-style per ``launch.sharding.paged_param_specs``
+(attention projections on the head dim, MLP on d_ff, lm_head on vocab);
+the page pool shards its KV-head dim (``paged_page_specs``), so the
+Pallas kernels run unchanged on each shard's local heads and only the
+wo / w_down partial sums are all-reduced.  When ``num_kv_heads % tp != 0``
+the attention subsystem (weights + pool) falls back to replication and
+only divisible subsystems shard.  With a sharded pool each device holds
+``1/tp`` of every page, so the backend hosts ``num_blocks × tp`` pages at
+the same per-device footprint — the engine's BlockManager sees the
+mesh-wide aggregate pool.
 """
 
 from __future__ import annotations
 
 import functools
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.archs import reduced_config
+from repro.launch.sharding import (paged_page_specs, paged_param_specs,
+                                   paged_tp_plan, serving_tp_ctx)
 from repro.models.model import build_model
 from repro.serving.backend import Backend, Sampler
 
@@ -52,9 +68,24 @@ class PagedJaxBackend(Backend):
     def __init__(self, arch: str = "tinyllama-1.1b", num_blocks: int = 64,
                  page: int = 16, max_len: int = 128, seed: int = 0,
                  temperature: float = 0.0, top_k: int = 0,
-                 overhead: float = 1e-4, interpret: bool = True):
+                 overhead: float = 1e-4, interpret: bool = True,
+                 tp: int = 1, devices: Optional[Sequence] = None):
         self.cfg = reduced_config(arch)
-        self.model = build_model(self.cfg)
+        self.tp = max(int(tp), 1)
+        self.plan = paged_tp_plan(self.cfg, self.tp)
+        if self.tp > 1:
+            devs = list(devices) if devices else jax.devices()
+            if len(devs) < self.tp:
+                raise ValueError(
+                    f"tp={self.tp} needs {self.tp} devices, have "
+                    f"{len(devs)} (set XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=N on CPU)")
+            self.mesh = Mesh(np.array(devs[:self.tp]), ("model",))
+            ctx = serving_tp_ctx(self.cfg, self.tp)
+        else:
+            self.mesh = None
+            ctx = None
+        self.model = build_model(self.cfg, ctx)
         if not self.model.supports_paged():
             raise ValueError(
                 f"{arch}: paged serving needs a pure-attention stack with "
@@ -63,10 +94,14 @@ class PagedJaxBackend(Backend):
         self.page = page
         self.max_len = max_len
         self.n_max = -(-max_len // page)         # block-table width
-        self.scrap = num_blocks                  # pad rows write here
+        # a KV-head-sharded pool costs 1/tp of a page per device, so the
+        # same per-device HBM budget hosts tp× the pages: the pool the
+        # engine allocates from is the MESH-WIDE aggregate
+        pool = num_blocks * (self.tp if self.plan["attn"] else 1)
+        self.scrap = pool                        # pad rows write here
         # +1: the scrap page lives at the end of the pool, outside the
-        # BlockManager's 0..num_blocks-1 range
-        self.pages = self.model.init_paged_caches(num_blocks + 1, page)
+        # BlockManager's 0..pool-1 range
+        self.pages = self.model.init_paged_caches(pool + 1, page)
         self.overhead = overhead
         self.interpret = interpret
         self.sampler = Sampler(temperature=temperature, top_k=top_k,
@@ -76,14 +111,57 @@ class PagedJaxBackend(Backend):
         self._host: Dict[int, object] = {}       # swapped-out page contents
         self._seed = seed
         self._t_acc = 0.0
-        self._prefill = jax.jit(self.model.prefill_paged)
-        self._decode = jax.jit(functools.partial(
-            self.model.decode_paged, interpret=interpret))
+        self._page_shardings = None
+        if self.mesh is None:
+            self._prefill = jax.jit(self.model.prefill_paged)
+            self._decode = jax.jit(functools.partial(
+                self.model.decode_paged, interpret=interpret))
+        else:
+            self._build_sharded_step_fns()
 
-        # engine-facing geometry (BlockManager mirrors the device pool)
+        # engine-facing geometry (BlockManager mirrors the device pool).
+        # kv_shard_degree is the factor each PAGE is split by across the
+        # mesh — the replicated-KV fallback keeps full pages per device,
+        # so it stays 1 there even though tp > 1
         self.block_tokens = page
-        self.num_blocks = num_blocks
+        self.num_blocks = pool
         self.kv_bytes = float(self.model.kv_bytes_per_token())
+        self.kv_shard_degree = self.tp if self.plan["attn"] else 1
+
+    def _build_sharded_step_fns(self) -> None:
+        """jit(shard_map(...)) wrappers around the paged entry points.
+
+        Weights and the page pool are placed resident-sharded once; every
+        other operand (tokens, positions, block tables) is replicated.
+        ``check_rep=False``: the psums inside attention/MLP make the
+        activations replicated again, which shard_map can't prove."""
+        from jax.experimental.shard_map import shard_map
+        pspecs = paged_param_specs(self.cfg, self.tp, self.params)
+        gspecs = paged_page_specs(self.cfg, self.tp, self.pages)
+        sh = lambda tree: jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), tree,
+            is_leaf=lambda x: isinstance(x, P))
+        self._param_shardings = sh(pspecs)
+        self._page_shardings = sh(gspecs)
+        self.params = jax.device_put(self.params, self._param_shardings)
+        self.pages = jax.device_put(self.pages, self._page_shardings)
+        self._prefill = jax.jit(shard_map(
+            self.model.prefill_paged, mesh=self.mesh,
+            in_specs=(pspecs, gspecs, P(), P(), P(), P()),
+            out_specs=gspecs, check_rep=False))
+        self._decode = jax.jit(shard_map(
+            functools.partial(self.model.decode_paged,
+                              interpret=self.interpret),
+            mesh=self.mesh,
+            in_specs=(pspecs, gspecs, P(), P(), P()),
+            out_specs=(P(), gspecs), check_rep=False))
+
+    def _commit_pages(self) -> None:
+        """Re-pin the pool's sharding after a host-side page mutation
+        (swap-in scatter / COW copy) — no-op at tp=1 or when the eager op
+        already preserved the placement."""
+        if self._page_shardings is not None:
+            self.pages = jax.device_put(self.pages, self._page_shardings)
 
     # ------------------------------------------------------------------
     def prompt_ids(self, req) -> np.ndarray:
@@ -196,6 +274,7 @@ class PagedJaxBackend(Backend):
         table = np.asarray(block_table, np.int32)
         self.pages = jax.tree.map(
             lambda p, s: self._scatter(p, table, s), self.pages, saved)
+        self._commit_pages()
 
     def kv_copy_page(self, src: int, dst: int) -> None:
         """COW fork: duplicate device page src into dst (the engine is
@@ -204,6 +283,7 @@ class PagedJaxBackend(Backend):
         self.pages = jax.tree.map(
             lambda p: (p.at[:, dst].set(p[:, src]) if p.ndim == 5
                        else p.at[dst].set(p[src])), self.pages)
+        self._commit_pages()
 
     def kv_release(self, rid: int) -> None:
         self._host.pop(rid, None)

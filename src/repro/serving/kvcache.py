@@ -79,11 +79,21 @@ class SeqAlloc:
 
 
 class BlockManager:
+    """``num_blocks``/``kv_bytes_per_token`` describe the replica's
+    MESH-WIDE aggregate pool: under serving tensor parallelism (DESIGN.md
+    §8) each device holds a KV-head slice of every page, so per-token
+    bytes stay the full-model figure while the page count scales with the
+    mesh.  ``tp`` here is the PAGE-split factor (the backend's
+    ``kv_shard_degree``) — 1 under the replicated-KV fallback even on a
+    wider mesh — so ``device_bytes_per_block`` stays honest."""
+
     def __init__(self, num_blocks: int, block_tokens: int = BLOCK_TOKENS,
-                 kv_bytes_per_token: float = KV_BYTES_PER_TOKEN):
+                 kv_bytes_per_token: float = KV_BYTES_PER_TOKEN,
+                 tp: int = 1):
         self.num_blocks = num_blocks
         self.block_tokens = block_tokens
         self.kv_bytes_per_token = kv_bytes_per_token
+        self.tp = max(int(tp), 1)
         self.free: List[int] = list(range(num_blocks))
         self.refcnt: List[int] = [0] * num_blocks
         self.seqs: Dict[int, SeqAlloc] = {}
@@ -123,6 +133,11 @@ class BlockManager:
 
     def free_tokens(self) -> int:
         return self.available_blocks * self.block_tokens
+
+    def device_bytes_per_block(self) -> float:
+        """Per-DEVICE bytes one page occupies (the aggregate split over
+        the tp-way mesh; equals the full page at tp=1)."""
+        return self.kv_bytes_per_token * self.block_tokens / self.tp
 
     def can_fit(self, tokens: int) -> bool:
         need = -(-tokens // self.block_tokens)

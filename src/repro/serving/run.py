@@ -33,6 +33,8 @@ def make_backend(backend: Union[str, Backend, None],
     """Resolve the --backend axis: "sim" | "jax" | instance | None."""
     if backend is None or backend == "sim":
         kw = dict(backend_kwargs or {})
+        kw.pop("tp", None)     # sim models its chips explicitly
+        kw.pop("devices", None)
         return SimBackend.for_model(kw.pop("name", "llama-8b"), **kw)
     if backend == "jax":
         from repro.serving.jax_backend import PagedJaxBackend
@@ -40,6 +42,17 @@ def make_backend(backend: Union[str, Backend, None],
     if isinstance(backend, str):
         raise ValueError(f"unknown backend {backend!r} (sim | jax)")
     return backend
+
+
+def _with_tp(backend, backend_kwargs: Optional[Dict],
+             engine_cfg: EngineConfig) -> Optional[Dict]:
+    """Thread EngineConfig.tp into the jax backend spec (explicit
+    backend_kwargs['tp'] wins)."""
+    if backend != "jax" or engine_cfg.tp <= 1:
+        return backend_kwargs
+    kw = dict(backend_kwargs or {})
+    kw.setdefault("tp", engine_cfg.tp)
+    return kw
 
 
 def run_experiment(scheduler: str = "tempo",
@@ -52,7 +65,8 @@ def run_experiment(scheduler: str = "tempo",
                    backend_kwargs: Optional[Dict] = None) -> Summary:
     spec = spec or WorkloadSpec()
     engine_cfg = engine_cfg or EngineConfig()
-    backend = make_backend(backend, backend_kwargs)
+    backend = make_backend(backend, _with_tp(backend, backend_kwargs,
+                                             engine_cfg))
     service = service or ServiceModel()
     sk = dict(sched_kwargs or {})
     if _service_aware(scheduler):
@@ -106,6 +120,9 @@ def run_cluster_experiment(scheduler: str = "tempo",
     optional goodput-driven autoscaling.  Every replica gets its OWN
     scheduler, backend, EngineConfig copy, and KV pool; they share only the
     ``WorkloadGen`` (collective-DAG ground truth) and the arrival stream.
+    With ``engine_cfg.tp > 1`` on the jax backend the fleet is N replicas ×
+    tp-way device meshes: each replica gets its own tp-device slice of the
+    local device pool (wrapping round-robin when N·tp exceeds it).
     """
     from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
     from repro.cluster.engine import ClusterEngine
@@ -116,8 +133,25 @@ def run_cluster_experiment(scheduler: str = "tempo",
     service = service or ServiceModel()
     # every replica runs the SAME model: a fresh backend per replica (own
     # device page pool / timers), built from the same backend spec
-    backend_factory = backend_factory or (
-        lambda rid: make_backend(backend, backend_kwargs))
+    if backend_factory is None:
+        base_kw = _with_tp(backend, backend_kwargs, engine_cfg)
+
+        def backend_factory(rid: int):
+            kw = base_kw
+            tp = (base_kw or {}).get("tp", 1)
+            if backend == "jax" and tp > 1 and "devices" not in base_kw:
+                import jax
+                devs = jax.devices()
+                # distinct-per-replica slice, wrapping round-robin; with
+                # tp <= device count the modulo indices are distinct.
+                # Fewer devices than tp: pass nothing and let the backend
+                # raise its ValueError naming the XLA_FLAGS remedy (a
+                # duplicate-device list would die inside Mesh instead)
+                if len(devs) >= tp:
+                    kw = dict(base_kw)
+                    kw["devices"] = [devs[(rid * tp + i) % len(devs)]
+                                     for i in range(tp)]
+            return make_backend(backend, kw)
     base_sk = dict(sched_kwargs or {})
     if _service_aware(scheduler):
         base_sk.setdefault("service", service)

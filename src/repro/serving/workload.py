@@ -224,6 +224,16 @@ class WorkloadGen:
             stage_lens.append(lens)
         self._dag_lens = getattr(self, "_dag_lens", {})
         self._dag_lens[dag.dag_id] = stage_lens
+        # rids for EVERY stage are reserved now, at arrival: stage n+1
+        # spawns closed-loop at stage-n completion, and completion order
+        # is engine- and wall-clock-dependent (real backends measure step
+        # time).  Drawing rids at spawn time would bind rid -> logical
+        # request differently run to run — and rid seeds the synthesized
+        # prompt tokens and hint noise, so token streams would stop being
+        # run/tp-invariant (the determinism DESIGN.md §2 promises).
+        self._dag_rids = getattr(self, "_dag_rids", {})
+        self._dag_rids[dag.dag_id] = [[self._next_rid() for _ in range(n)]
+                                      for n in sizes]
         return dag, self.spawn_stage(dag, 0, t)
 
     def spawn_stage(self, dag: CollectiveDag, stage: int,
@@ -232,8 +242,9 @@ class WorkloadGen:
         if dag.dag_id in self._agentic:
             return self._spawn_agentic_stage(dag, stage, now)
         reqs = []
-        for li, lo in self._dag_lens[dag.dag_id][stage]:
-            r = Request(rid=self._next_rid(), app=dag.app, arrival=now,
+        rids = self._dag_rids[dag.dag_id][stage]
+        for i, (li, lo) in enumerate(self._dag_lens[dag.dag_id][stage]):
+            r = Request(rid=rids[i], app=dag.app, arrival=now,
                         prompt_len=li, true_output_len=lo,
                         slo=SLOSpec("collective",
                                     ttlt=max(dag.deadline - now, 1e-3)),
@@ -342,8 +353,12 @@ class WorkloadGen:
         for _ in range(n_stages):
             li, lo = self._seg_lens(True)
             lens.append((max(4, li // 4), max(8, lo // n_stages)))
+        # rids reserved at arrival for every stage (see _mk_dag): stages
+        # spawn closed-loop, and spawn-time rid draws would make the
+        # rid -> request binding completion-order-dependent
         self._agentic[dag.dag_id] = dict(
-            lens=lens, sys_len=sp.system_prompt_len if shared else 0)
+            lens=lens, sys_len=sp.system_prompt_len if shared else 0,
+            rids=[self._next_rid() for _ in range(n_stages)])
         return dag, self.spawn_stage(dag, 0, t)
 
     def _spawn_agentic_stage(self, dag: CollectiveDag, stage: int,
@@ -353,7 +368,7 @@ class WorkloadGen:
         hist = sum(li + lo for li, lo in lens[:stage])
         li, lo = lens[stage]
         hist_p = hist + li
-        r = Request(rid=self._next_rid(), app="agent", arrival=now,
+        r = Request(rid=info["rids"][stage], app="agent", arrival=now,
                     prompt_len=sys_len + hist_p, true_output_len=lo,
                     slo=SLOSpec("collective",
                                 ttlt=max(dag.deadline - now, 1e-3)),
