@@ -20,6 +20,7 @@ bench is in the run set).
 from __future__ import annotations
 
 import json
+import math
 import os
 from typing import Dict, List, Optional, Tuple
 
@@ -90,6 +91,10 @@ def check_rows(name: str, fresh: List[Dict],
             try:
                 b, g = float(base[metric]), float(got[metric])
             except (TypeError, ValueError):
+                continue
+            if math.isnan(b) or math.isnan(g):
+                # null/NaN percentile cells mean "no samples" (see
+                # serving.metrics._pctl), never a regression
                 continue
             if abs(g - b) > use:
                 failures.append(

@@ -60,6 +60,10 @@ def main() -> None:
                     help="shared-prefix KV reuse (default on)")
     ap.add_argument("--no-prefix-cache", dest="prefix_cache",
                     action="store_false")
+    ap.add_argument("--metrics-out", default=None,
+                    help="enable telemetry (DESIGN.md §9): per-scheduler "
+                    "metric/trace snapshots under DIR/<scheduler>/ plus a "
+                    "static report.html in each")
     args = ap.parse_args()
 
     if args.backend == "jax":
@@ -102,9 +106,16 @@ def main() -> None:
         # token streams are digestable after the run
         backend = make_backend(args.backend, backend_kwargs) \
             if args.backend == "jax" else args.backend
+        mdir = os.path.join(args.metrics_out, name) \
+            if args.metrics_out else None
         s = run_experiment(name, spec=spec, engine_cfg=engine_cfg,
                            backend=backend,
-                           backend_kwargs=backend_kwargs)
+                           backend_kwargs=backend_kwargs,
+                           metrics_out=mdir)
+        if mdir:
+            from repro.launch.dashboard import write_report
+            write_report(mdir, title=f"Fleet telemetry — {name} "
+                         f"@{args.backend}")
         pt = s.per_type
         get = lambda k: pt.get(k, {}).get("slo_met", float("nan"))
         print(f"{name:<16} {s.service_gain:>12.0f} {s.goodput_frac:>9.3f} "

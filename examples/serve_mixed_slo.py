@@ -54,9 +54,13 @@ def main():
         print(f"\n== {name}: gain={s.service_gain:.0f} "
               f"goodput={s.goodput_frac:.3f} tok/s={s.throughput_tok_s:.0f}")
         for kind, v in s.per_type.items():
+            # percentiles are None (not NaN) for classes with no samples
+            fmt = lambda x, scale=1.0, nd=2: \
+                "-" if x is None else f"{x * scale:.{nd}f}"
             print(f"   {kind:<11} met={v['slo_met']:.2f} "
-                  f"ttft_p95={v['ttft_p95']:.2f}s tbt_p95={v['tbt_p95']*1e3:.0f}ms "
-                  f"ttlt_p95={v['ttlt_p95']:.1f}s")
+                  f"ttft_p95={fmt(v['ttft_p95'])}s "
+                  f"tbt_p95={fmt(v['tbt_p95'], 1e3, 0)}ms "
+                  f"ttlt_p95={fmt(v['ttlt_p95'], 1.0, 1)}s")
 
 
 if __name__ == "__main__":

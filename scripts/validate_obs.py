@@ -1,0 +1,127 @@
+"""CI validator for a ``--metrics-out`` directory (DESIGN.md §9).
+
+  PYTHONPATH=src python scripts/validate_obs.py DIR [DIR ...]
+
+Checks, per directory:
+  * ``metrics.prom`` parses under the strict dependency-free parser
+    (``repro.obs.export.parse_prometheus``) and carries at least one
+    sample;
+  * ``trace.jsonl`` rows match the event schema (name/rid/t/replica, known
+    event names, monotone non-negative timestamps per request);
+  * every admitted request's chain reaches a terminal event (finish/shed)
+    — no half-open lifecycle chains;
+  * ``report.html`` (when present) is non-empty and contains the chart
+    panels.
+
+Exit code 0 = all directories valid.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs import TERMINAL, parse_prometheus   # noqa: E402
+
+EVENT_NAMES = {"admit", "prefix_match", "prefill_chunk", "defer", "resume",
+               "preempt", "swap_in", "first_token", "finish", "shed"}
+
+
+def _fail(msg: str, failures: list) -> None:
+    print(f"  FAIL: {msg}")
+    failures.append(msg)
+
+
+def validate_dir(d: str) -> list:
+    failures: list = []
+    print(f"[validate_obs] {d}")
+
+    prom = os.path.join(d, "metrics.prom")
+    if not os.path.exists(prom):
+        _fail("metrics.prom missing", failures)
+    else:
+        try:
+            with open(prom) as f:
+                parsed = parse_prometheus(f.read())
+            n = len(parsed["samples"])
+            if n == 0:
+                _fail("metrics.prom has no samples", failures)
+            else:
+                print(f"  metrics.prom: {n} samples, "
+                      f"{len(parsed['types'])} metrics OK")
+        except ValueError as e:
+            _fail(f"metrics.prom unparseable: {e}", failures)
+
+    tr = os.path.join(d, "trace.jsonl")
+    if not os.path.exists(tr):
+        _fail("trace.jsonl missing", failures)
+        return failures
+    admitted, terminal, last_t = set(), set(), {}
+    n_events = 0
+    with open(tr) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError:
+                _fail(f"trace.jsonl:{i + 1} not JSON", failures)
+                continue
+            n_events += 1
+            for key in ("name", "rid", "t", "replica"):
+                if key not in ev:
+                    _fail(f"trace.jsonl:{i + 1} missing '{key}'", failures)
+            name, rid, t = ev.get("name"), ev.get("rid"), ev.get("t", 0.0)
+            if name not in EVENT_NAMES:
+                _fail(f"trace.jsonl:{i + 1} unknown event {name!r}",
+                      failures)
+            if not isinstance(t, (int, float)) or t < 0:
+                _fail(f"trace.jsonl:{i + 1} bad timestamp {t!r}", failures)
+            elif t + 1e-9 < last_t.get(rid, 0.0):
+                _fail(f"r{rid}: time went backwards at {name} "
+                      f"({t} < {last_t[rid]})", failures)
+            last_t[rid] = max(last_t.get(rid, 0.0), float(t))
+            if name == "admit":
+                admitted.add(rid)
+            if name in TERMINAL:
+                terminal.add(rid)
+    open_chains = admitted - terminal
+    if open_chains:
+        _fail(f"{len(open_chains)} admitted requests never reached a "
+              f"terminal event, e.g. {sorted(open_chains)[:5]}", failures)
+    print(f"  trace.jsonl: {n_events} events, {len(admitted)} chains, "
+          f"{len(terminal)} terminal"
+          + ("" if failures else " OK"))
+
+    rep = os.path.join(d, "report.html")
+    if os.path.exists(rep):
+        with open(rep) as f:
+            text = f.read()
+        if "<svg" not in text or "</body>" not in text:
+            _fail("report.html missing chart panels", failures)
+        else:
+            print(f"  report.html: {len(text)} chars OK")
+    return failures
+
+
+def main(argv=None) -> int:
+    dirs = (argv if argv is not None else sys.argv[1:]) or []
+    if not dirs:
+        print(__doc__)
+        return 2
+    all_failures = []
+    for d in dirs:
+        all_failures += validate_dir(d)
+    if all_failures:
+        print(f"[validate_obs] {len(all_failures)} failure(s)")
+        return 1
+    print("[validate_obs] all OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -16,6 +16,7 @@ from collections import deque
 from typing import Deque, Optional, Tuple
 
 from repro.core.service import ServiceModel
+from repro.obs import NULL
 from repro.serving.request import Request
 
 
@@ -35,6 +36,9 @@ class AutoscalerConfig:
 
 
 class Autoscaler:
+    # metrics registry handle (repro.obs), rebound by ClusterEngine
+    obs = NULL
+
     def __init__(self, config: Optional[AutoscalerConfig] = None,
                  service: Optional[ServiceModel] = None):
         self.cfg = config or AutoscalerConfig()
@@ -63,16 +67,24 @@ class Autoscaler:
         if t - self._last_action_t < c.cooldown:
             return 0
         att = self.attainment(t)
+        if att is not None:
+            self.obs.gauge("autoscaler_attainment",
+                           "sliding-window fleet SLO attainment"
+                           ).set(att, t=t)
         overloaded = mean_queue > c.up_queue_frac * max_batch
         if n_active < c.max_replicas and \
                 (overloaded or (att is not None and att < c.up_below)):
             self._last_action_t = t
             self.actions.append((t, +1, n_active + 1))
+            self.obs.counter("autoscaler_scale_total", "scaling actions",
+                             direction="up").inc(t=t)
             return +1
         if n_active > c.min_replicas and att is not None \
                 and att > c.down_above \
                 and mean_queue < c.down_queue_frac * max_batch:
             self._last_action_t = t
             self.actions.append((t, -1, n_active - 1))
+            self.obs.counter("autoscaler_scale_total", "scaling actions",
+                             direction="down").inc(t=t)
             return -1
         return 0

@@ -25,6 +25,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.cluster.autoscaler import Autoscaler
 from repro.cluster.router import Router
+from repro.obs import NULL
 from repro.serving.engine import ServeEngine
 from repro.serving.request import ReqState, Request
 
@@ -67,12 +68,18 @@ class Replica:
 class ClusterEngine:
     def __init__(self, replica_factory: Callable[[int], ServeEngine],
                  router: Router, n_replicas: int = 2,
-                 autoscaler: Optional[Autoscaler] = None):
+                 autoscaler: Optional[Autoscaler] = None, obs=None):
         if n_replicas < 1:
             raise ValueError("a cluster needs at least one replica")
         self.replica_factory = replica_factory
         self.router = router
         self.autoscaler = autoscaler
+        # fleet-level registry (DESIGN.md §9); replica engines report into
+        # per-replica labeled views of the same registry via the factory
+        self.obs = obs if obs is not None else NULL
+        router.obs = self.obs
+        if autoscaler is not None:
+            autoscaler.obs = self.obs
         self.replicas: List[Replica] = [
             Replica(i, replica_factory(i)) for i in range(n_replicas)]
         self._next_rid = n_replicas
@@ -80,6 +87,8 @@ class ClusterEngine:
         self.routed: Dict[int, int] = {rep.rid: 0 for rep in self.replicas}
         # (t, n_active) recorded at every fleet-size change
         self.replica_timeline: List[Tuple[float, int]] = [(0.0, n_replicas)]
+        self.obs.gauge("cluster_active_replicas", "active fleet size"
+                       ).set(n_replicas, t=0.0)
 
     # ------------------------------------------------------------------
     def active(self) -> List[Replica]:
@@ -109,6 +118,19 @@ class ClusterEngine:
                 rep.engine.enqueue(kind, obj)
                 self.routed[rep.rid] = self.routed.get(rep.rid, 0) \
                     + (1 if kind == "r" else len(obj[1]))
+                self.router.note_route(rep, kind, t)
+                if self.obs.enabled:
+                    # per-replica load snapshot at every routing instant —
+                    # the signal the router actually saw
+                    for rp in self.active():
+                        self.obs.gauge("cluster_queue_len",
+                                       "live+queued requests",
+                                       replica=rp.rid
+                                       ).set(rp.queue_len(), t=t)
+                        self.obs.gauge("cluster_kv_used_frac",
+                                       "replica KV pressure",
+                                       replica=rp.rid
+                                       ).set(rp.kv_used_frac(), t=t)
                 continue
             if not evs:
                 break
@@ -158,6 +180,8 @@ class ClusterEngine:
         self.replicas.append(rep)
         self.routed[rid] = 0
         self.replica_timeline.append((t, len(self.active())))
+        self.obs.gauge("cluster_active_replicas", "active fleet size"
+                       ).set(len(self.active()), t=t)
 
     def _drain(self, t: float, act: List[Replica]) -> None:
         # drain the emptiest replica: least work lost behind the barrier
@@ -166,6 +190,8 @@ class ClusterEngine:
         if rep.engine.peek_next_event() is None:
             rep.retired_at = t
         self.replica_timeline.append((t, len(self.active())))
+        self.obs.gauge("cluster_active_replicas", "active fleet size"
+                       ).set(len(self.active()), t=t)
 
     # ------------------------------------------------------------------
     @property

@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core.service import ServiceModel
 from repro.core.slo_tracker import SLOTracker
+from repro.obs import NULL
 from repro.serving.request import ReqState, Request
 
 
@@ -48,9 +49,19 @@ class Router:
     empty.  Implementations must be deterministic."""
 
     name = "base"
+    # metrics registry handle (repro.obs), rebound by ClusterEngine
+    obs = NULL
 
     def route(self, kind: str, obj, replicas: List, now: float):
         raise NotImplementedError
+
+    def note_route(self, rep, kind: str, now: float) -> None:
+        """Record one routing decision (ClusterEngine calls this after
+        every route() so all policies share the counter)."""
+        self.obs.counter("router_routed_total",
+                         "arrivals routed, by policy/replica/kind",
+                         policy=self.name, replica=rep.rid,
+                         kind=kind).inc(t=now)
 
     # ------------------------------------------------------------------
     @staticmethod

@@ -120,6 +120,10 @@ class GroupedMarginScheduler(AnalyzedSchedulerBase):
         # router-facing summary: group counts + aggregate lateness seconds
         self.margin_summary: Dict[str, object] = {
             "counts": {g: 0 for g in GROUPS}, "lateness": 0.0, "t": 0.0}
+        # telemetry roll-ups (threaded into Summary by the runners)
+        self.n_quanta = 0              # priority/margin refreshes performed
+        self.n_deferrals = 0           # slack→deferred transitions
+        self._deferred: set = set()    # rids currently JIT-deferred
 
     # ------------------------------------------------------------------
     # margin computation
@@ -266,6 +270,18 @@ class GroupedMarginScheduler(AnalyzedSchedulerBase):
                 lateness += max(-gi.effective_margin(view.now), 0.0)
         self.margin_summary = {"counts": counts, "lateness": lateness,
                                "t": view.now}
+        if (view.step - self._prio_step) == 0:   # a refresh happened above
+            self.n_quanta += 1
+            obs = self.obs
+            obs.counter("sched_quanta_total",
+                        "margin-group refreshes").inc(t=view.now)
+            for g, n in counts.items():
+                obs.gauge("sched_group_size",
+                          "margin-group census at quanta refresh",
+                          group=g).set(n, t=view.now)
+            obs.gauge("sched_group_lateness_seconds",
+                      "aggregate lateness of late+hopeless work"
+                      ).set(lateness, t=view.now)
 
     # ------------------------------------------------------------------
     # allocation
@@ -446,6 +462,7 @@ class GroupedMarginScheduler(AnalyzedSchedulerBase):
         #    DAG's stage barrier.
         shed: List[int] = []
         if view.kv_free_frac < self.kv_shed_frac:
+            n_shed_decode = 0
             for r in sorted(by_group["hopeless"],
                             key=lambda r: (-(r.prompt_len + r.decoded),
                                            r.rid)):
@@ -453,8 +470,10 @@ class GroupedMarginScheduler(AnalyzedSchedulerBase):
                     continue
                 shed.append(r.rid)
                 self._dirty = True
+                n_shed_decode += 1
             # also consider hopeless requests still mid-prefill: they hold
             # KV and cannot possibly pay back
+            n_shed_prefill = 0
             for r in reqs:
                 if r.prefill_remaining > 0 and r.dag_id is None \
                         and r.slo.kind not in ("none", "collective"):
@@ -463,6 +482,16 @@ class GroupedMarginScheduler(AnalyzedSchedulerBase):
                             and r.rid not in shed:
                         shed.append(r.rid)
                         self._dirty = True
+                        n_shed_prefill += 1
+            if n_shed_decode:
+                self.obs.counter("sched_shed_total",
+                                 "sheds by reason",
+                                 reason="hopeless_decode"
+                                 ).inc(n_shed_decode, t=now)
+            if n_shed_prefill:
+                self.obs.counter("sched_shed_total", "sheds by reason",
+                                 reason="hopeless_prefill"
+                                 ).inc(n_shed_prefill, t=now)
         shed_set = set(shed)
         if shed_set:
             decode_ids = [rid for rid in decode_ids if rid not in shed_set]
@@ -535,5 +564,27 @@ class GroupedMarginScheduler(AnalyzedSchedulerBase):
                      if rid not in chosen and rid not in shed_set
                      and group_of.get(rid) in self._DISPATCH]
         self._running = set(decode_ids)
+
+        # JIT-deferral accounting: a decodable slack request not chosen
+        # this step is deferred; count and trace only the TRANSITIONS
+        # (deferral persists across many steps — per-step events would
+        # read as thrash).  A deferred request that leaves the set has
+        # resumed: it was re-dispatched, reclassified tighter, or shed.
+        deferred = {r.rid for r in by_group["slack"]
+                    if r.rid not in chosen and r.rid not in shed_set}
+        newly = deferred - self._deferred
+        resumed = self._deferred - deferred
+        if newly:
+            self.n_deferrals += len(newly)
+            self.obs.counter("sched_defer_total",
+                             "JIT deferrals (slack slot yields)"
+                             ).inc(len(newly), t=now)
+            if self.tracer.enabled:
+                for rid in sorted(newly):
+                    self.tracer.event("defer", rid, now, self.replica)
+        if resumed and self.tracer.enabled:
+            for rid in sorted(resumed):
+                self.tracer.event("resume", rid, now, self.replica)
+        self._deferred = deferred
         return Decision(decode_ids=decode_ids, prefill=prefill,
                         preempted=preempted, shed=shed)

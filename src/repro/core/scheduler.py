@@ -33,6 +33,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Set
 
 from repro.core.dag import DagMatcher, DagTracker, SuperGraph
 from repro.core.predictor import LengthPredictor
+from repro.obs import NULL as OBS_NULL, NULL_TRACER as TRACER_NULL
 from repro.core.service import ServiceModel
 from repro.core.slo_tracker import SLOTracker
 from repro.serving.kvcache import BLOCK_TOKENS, block_bytes
@@ -67,6 +68,12 @@ class EngineView:
 class SchedulerBase:
     name = "base"
     needs_predictions = False
+    # telemetry handles (repro.obs), rebound by the owning ServeEngine so
+    # scheduler instrumentation shares the run's registry/tracer; the
+    # class-level defaults are the zero-cost disabled singletons
+    obs = OBS_NULL
+    tracer = TRACER_NULL
+    replica = 0
 
     def on_arrival(self, req: Request, view: EngineView):  # pragma: no cover
         pass

@@ -340,3 +340,126 @@ def roofline_terms(rec: dict) -> dict:
         "mfu_bound": ideal / max(t_c, t_mo, t_i, 1e-30),
         "mfu_bound_pess": ideal / max(t_c, t_m, t_i, 1e-30),
     }
+
+
+# ---------------------------------------------------------------------------
+# Serving-path profiling: roofline ONE PagedJaxBackend decode step
+# ---------------------------------------------------------------------------
+def roofline_decode_step(arch: str = "tinyllama-1.1b", batch: int = 4,
+                         num_blocks: int = 32, page: int = 16,
+                         max_len: int = 64, repeats: int = 3,
+                         interpret: bool = True, registry=None) -> dict:
+    """Profile one paged decode dispatch end-to-end (DESIGN.md §9).
+
+    Lowers+compiles the backend's jitted ``decode_paged`` at the padded
+    batch bucket, walks the optimized HLO through ``analyze_compiled``,
+    pairs it with the analytic 2·N·B decode FLOPs and a best-of-``repeats``
+    measured wall time, and reports the roofline terms.  All numbers land
+    in ``registry`` as ``roofline_decode_*`` gauges when one is passed.
+
+    Pallas-opacity: with ``interpret=False`` the attention kernel can lower
+    to an opaque custom-call the HLO walker cannot cost; the record then
+    carries ``hlo_opaque=True`` and the HLO-derived terms are lower bounds
+    (interpret mode traces the kernel into plain HLO and stays fully
+    costable — hence the default)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.shapes import Shape
+    from repro.obs import NULL
+    from repro.serving.jax_backend import PagedJaxBackend, _bucket
+
+    obs = registry if registry is not None else NULL
+    be = PagedJaxBackend(arch, num_blocks=max(num_blocks, batch), page=page,
+                         max_len=max_len, seed=0, interpret=interpret)
+    B = _bucket(batch, lo=1)
+    # one resident page of context per row (position page-1), distinct
+    # pages so the dispatch gathers/scatters like a live mixed batch
+    toks = jnp.zeros((B, 1), jnp.int32)
+    pos = jnp.full((B,), page - 1, jnp.int32)
+    tabs_np = np.full((B, be.n_max), be.scrap, np.int32)
+    tabs_np[:, 0] = np.arange(B)
+    tabs = jnp.asarray(tabs_np)
+
+    compiled = be._decode.lower(be.params, be.pages, toks, pos,
+                                tabs).compile()
+    rec = analyze_compiled(compiled.as_text(), chips=1)
+    rec["hlo_opaque"] = rec["hlo_flops_per_chip"] <= 0.0
+    rec["chips"] = 1
+    rec["model_flops"] = model_flops(
+        be.cfg, Shape("decode_step", seq_len=page, global_batch=B,
+                      kind="decode"))
+
+    import time as _time
+    jax.block_until_ready(be._decode(be.params, be.pages, toks, pos, tabs))
+    best = float("inf")
+    for _ in range(max(repeats, 1)):
+        t0 = _time.perf_counter()
+        jax.block_until_ready(
+            be._decode(be.params, be.pages, toks, pos, tabs))
+        best = min(best, _time.perf_counter() - t0)
+    rec["measured_s"] = best
+    rec.update(roofline_terms(rec))
+    # measured MFU against the reference accelerator's peak — a *bound
+    # check* number (CPU runs will be far below mfu_bound)
+    rec["mfu_measured"] = rec["model_flops"] / (best * PEAK_FLOPS)
+    rec.update(arch=arch, batch=B, page=page)
+
+    for key in ("hlo_flops_per_chip", "hlo_bytes_per_chip",
+                "coll_bytes_per_chip", "model_flops", "t_compute_s",
+                "t_memory_s", "t_collective_s", "roofline_s", "measured_s",
+                "mfu_bound", "mfu_measured"):
+        obs.gauge(f"roofline_decode_{key}",
+                  "paged decode-step roofline profile",
+                  arch=arch, batch=str(B)).set(float(rec[key]))
+    return rec
+
+
+def main(argv=None) -> int:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(
+        description="Roofline one PagedJaxBackend decode step")
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--page", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--num-blocks", type=int, default=32)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--no-interpret", action="store_true",
+                    help="compiled Pallas kernels (HLO may be opaque)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="directory for registry snapshots (DESIGN.md §9)")
+    args = ap.parse_args(argv)
+
+    registry = None
+    if args.metrics_out:
+        from repro.obs import MetricsRegistry
+        registry = MetricsRegistry()
+    rec = roofline_decode_step(
+        arch=args.arch, batch=args.batch, num_blocks=args.num_blocks,
+        page=args.page, max_len=args.max_len, repeats=args.repeats,
+        interpret=not args.no_interpret, registry=registry)
+    print(f"== decode-step roofline: {args.arch} B={rec['batch']} "
+          f"page={rec['page']}"
+          + (" [HLO opaque: custom-call kernels]" if rec["hlo_opaque"]
+             else ""))
+    for k in ("hlo_flops_per_chip", "hlo_bytes_per_chip", "model_flops",
+              "t_compute_s", "t_memory_s", "roofline_s", "measured_s",
+              "mfu_bound", "mfu_measured", "dominant"):
+        v = rec[k]
+        print(f"   {k:<22} {v:.4g}" if isinstance(v, float)
+              else f"   {k:<22} {v}")
+    if args.metrics_out:
+        from repro.obs import dump_all
+        paths = dump_all(args.metrics_out, registry=registry,
+                         extra={k: rec[k] for k in rec
+                                if not isinstance(rec[k], (list, dict))})
+        print("   wrote: " + ", ".join(sorted(paths)))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

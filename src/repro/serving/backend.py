@@ -38,6 +38,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.obs import NULL
 from repro.serving.kvcache import KV_BYTES_PER_TOKEN
 
 
@@ -48,6 +49,12 @@ class Backend:
     kv_bytes: float = KV_BYTES_PER_TOKEN
     block_tokens: Optional[int] = None  # page size; None -> engine default
     num_blocks: Optional[int] = None    # pool size; None -> EngineConfig
+    # metrics registry handle (repro.obs); the engine rebinds it at
+    # construction so backend profiling shares the run's registry
+    obs = NULL
+
+    def attach_obs(self, obs) -> None:
+        self.obs = obs
 
     def begin_step(self) -> None:
         pass

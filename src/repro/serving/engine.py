@@ -26,6 +26,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.scheduler import EngineView, SchedulerBase
+from repro.obs import NULL, NULL_TRACER
 # SimBackend is re-exported here for backward compatibility — most callers
 # still import it from repro.serving.engine.
 from repro.serving.backend import Backend, SimBackend  # noqa: F401
@@ -58,9 +59,27 @@ class EngineConfig:
 class ServeEngine:
     def __init__(self, backend, scheduler: SchedulerBase,
                  config: Optional[EngineConfig] = None,
-                 workload: Optional[WorkloadGen] = None):
+                 workload: Optional[WorkloadGen] = None,
+                 obs=None, tracer=None, replica: int = 0):
         self.backend = backend
         self.sched = scheduler
+        # telemetry (DESIGN.md §9): disabled by default via the no-op
+        # singletons.  Timestamps everywhere are the SIMULATED clock and
+        # instrumentation never reads back into scheduling, so digests are
+        # identical telemetry on/off.  The engine owns the handles and
+        # rebinds them into the scheduler and backend so all three layers
+        # report into one registry (in a cluster, a per-replica labeled
+        # view of the fleet registry).
+        self.replica = replica
+        self.obs = obs if obs is not None else NULL
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._trace = self.tracer.enabled
+        scheduler.obs = self.obs
+        scheduler.tracer = self.tracer
+        scheduler.replica = replica
+        if hasattr(backend, "attach_obs"):
+            backend.attach_obs(self.obs)
+        self._init_instruments()
         # NOTE: config must default to None — a dataclass instance in the
         # signature default would be shared across every engine, silently
         # coupling cluster replicas through one EngineConfig object.
@@ -102,8 +121,65 @@ class ServeEngine:
         self.cached_tokens = 0        # prompt tokens served from cache
         self.prefill_computed = 0     # prompt tokens actually computed
         self.cow_forks = 0            # shared pages forked before append
+        # signed (predicted − actual is negated: dt − pred) step-time
+        # residuals of the tracker's StepCostModel, one per step where a
+        # fit existed — Summary reports |residual| p50/p95
+        self.cost_residuals: List[float] = []
         self._pending: List[Tuple[float, int, object]] = []
         self._seq = 0
+
+    def _init_instruments(self) -> None:
+        """Resolve every hot-path instrument ONCE.  Under the no-op
+        registry these all bind to the shared no-op instrument — zero
+        entries are created and per-step record calls are empty method
+        dispatches."""
+        m = self.obs
+        tb = (1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 0.1, 0.3, 1.0, 3.0)
+        self._m_step = {
+            k: m.histogram("engine_step_seconds",
+                           "engine step wall-clock by phase mix",
+                           buckets=tb, phase=k)
+            for k in ("prefill", "decode", "mixed", "idle")}
+        self._m_prefill_tok = m.histogram(
+            "engine_step_prefill_tokens", "prefill tokens per step",
+            buckets=(8, 32, 128, 512, 2048, 8192))
+        self._m_decode_seqs = m.histogram(
+            "engine_step_decode_seqs", "decode batch width per step",
+            buckets=(1, 2, 4, 8, 16, 32, 64, 128, 256))
+        self._m_kv = m.gauge("engine_kv_used_frac",
+                             "KV pool used fraction "
+                             "(reclaimable cached blocks count as free)")
+        self._m_preempt = m.counter("engine_preempt_total",
+                                    "requests displaced from a slot")
+        self._m_swap = m.counter("engine_swap_bytes_total",
+                                 "KV bytes swapped to host")
+        self._m_shed_c = m.counter("engine_shed_total",
+                                   "requests dropped via Decision.shed")
+        self._m_kv_blocked = m.counter(
+            "engine_kv_blocked_steps_total",
+            "steps where a KV allocation failed under pressure")
+        self._m_admit = m.counter("engine_admitted_total",
+                                  "requests admitted")
+        self._m_finished = m.counter("engine_finished_total",
+                                     "requests finished")
+        self._m_prefix_hit = m.counter("engine_prefix_hits_total",
+                                       "prefix-cache hits at admit")
+        self._m_cached_tok = m.counter(
+            "engine_cached_tokens_total",
+            "prompt tokens served from the prefix cache")
+        self._m_resid = m.histogram(
+            "engine_cost_residual_seconds",
+            "abs(step-time cost-model prediction - actual)", buckets=tb)
+        self._m_ttft = {
+            k: m.histogram("engine_ttft_seconds", "time to first token",
+                           buckets=(0.01, 0.03, 0.1, 0.3, 1, 3, 10, 30,
+                                    100), slo=k)
+            for k in ("latency", "throughput", "collective", "none")}
+        self._m_tpot = {
+            k: m.histogram("engine_tpot_seconds",
+                           "mean time per output token at finish",
+                           buckets=tb, slo=k)
+            for k in ("latency", "throughput", "collective", "none")}
 
     # ------------------------------------------------------------------
     def load(self, singles: List[Request],
@@ -127,6 +203,11 @@ class ServeEngine:
 
     def _admit(self, req: Request):
         self.requests[req.rid] = req
+        self._m_admit.inc(t=self.now)
+        if self._trace:
+            self.tracer.event("admit", req.rid, self.now, self.replica,
+                              slo=req.slo.kind, prompt_len=req.prompt_len,
+                              arrival=round(req.arrival, 6))
         if self.cfg.prefix_cache:
             self._prefix_lookup(req)
         view = self._view()
@@ -152,6 +233,11 @@ class ServeEngine:
         req.prefilled = cached
         self.prefix_hits += 1
         self.cached_tokens += cached
+        self._m_prefix_hit.inc(t=self.now)
+        self._m_cached_tok.inc(cached, t=self.now)
+        if self._trace:
+            self.tracer.event("prefix_match", req.rid, self.now,
+                              self.replica, cached=cached)
 
     def _prefix_register(self, req: Request) -> None:
         """Publish a finished request's pages into the prefix index.  The
@@ -384,7 +470,9 @@ class ServeEngine:
         a = self.kv.seqs.get(rid)
         if a is not None and not a.swapped:
             self.backend.kv_swap_out(rid, self.kv.block_table(rid), a.tokens)
-        return self.kv.swap_out(rid)
+        moved = self.kv.swap_out(rid)
+        self._m_swap.inc(moved, t=self.now)
+        return moved
 
     def _ensure_kv(self, rid: int, tokens: int, protect: set) -> bool:
         r = self.requests[rid]
@@ -398,6 +486,9 @@ class ServeEngine:
             self._step_swap += cost or 0.0
             if not self.kv.seqs[rid].swapped:
                 self.backend.kv_swap_in(rid, self.kv.block_table(rid))
+                if self._trace:
+                    self.tracer.event("swap_in", rid, self.now,
+                                      self.replica)
         if self.kv.ensure(rid, tokens):
             return True
         if not self._evict_for(tokens, protect):
@@ -425,6 +516,10 @@ class ServeEngine:
             v.state = ReqState.PREEMPTED
             v.preemptions += 1
             self.preempt_count += 1
+            self._m_preempt.inc(t=self.now)
+            if self._trace:
+                self.tracer.event("preempt", v.rid, self.now, self.replica,
+                                  forced=1)
 
     def _execute(self, dec):
         self._step_swap = 0.0
@@ -442,6 +537,10 @@ class ServeEngine:
             self.kv.release(rid)
             self.backend.kv_release(rid)
             self.shed.append(r)
+            self._m_shed_c.inc(t=self.now)
+            if self._trace:
+                self.tracer.event("shed", rid, self.now, self.replica,
+                                  prefilled=r.prefilled, decoded=r.decoded)
         # displaced requests: slot lost; KV stays resident until pressure
         for rid in dec.preempted:
             r = self.requests.get(rid)
@@ -449,6 +548,10 @@ class ServeEngine:
                 r.state = ReqState.PREEMPTED
                 r.preemptions += 1
                 self.preempt_count += 1
+                self._m_preempt.inc(t=self.now)
+                if self._trace:
+                    self.tracer.event("preempt", rid, self.now,
+                                      self.replica)
 
         protect = set(dec.decode_ids) | set(dec.prefill)
         prefill_tokens = 0
@@ -474,6 +577,10 @@ class ServeEngine:
             r.state = ReqState.PREFILL
             prefill_tokens += chunk
             self.prefill_computed += chunk
+            if self._trace:
+                self.tracer.event("prefill_chunk", rid, self.now,
+                                  self.replica, chunk=chunk,
+                                  prefilled=r.prefilled)
 
         decode_ctxs = []
         decoded_reqs = []
@@ -504,8 +611,25 @@ class ServeEngine:
         ctx_total = sum(decode_ctxs)
         self.step_log.append((self.now, prefill_tokens, len(decoded_reqs),
                               ctx_total))
+        phase = ("mixed" if prefill_tokens and decode_ctxs else
+                 "prefill" if prefill_tokens else
+                 "decode" if decode_ctxs else "idle")
+        self._m_step[phase].observe(dt, t=self.now)
+        self._m_prefill_tok.observe(prefill_tokens, t=self.now)
+        self._m_decode_seqs.observe(len(decoded_reqs), t=self.now)
+        self._m_kv.set(1.0 - self.kv.available_frac, t=self.now)
+        if self._kv_blocked:
+            self._m_kv_blocked.inc(t=self.now)
         tr = self._tracker()
         if tr is not None:
+            # prediction-vs-actual residual of the model fitted on PRIOR
+            # steps (predict before on_step folds this step in)
+            cm = getattr(tr, "cost_model", None)
+            pred = cm.predict(prefill_tokens, len(decoded_reqs),
+                              float(ctx_total)) if cm is not None else None
+            if pred is not None:
+                self.cost_residuals.append(dt - pred)
+                self._m_resid.observe(abs(dt - pred), t=self.now)
             tr.on_step(dt, prefill_tokens, len(decoded_reqs),
                        float(ctx_total))
 
@@ -515,6 +639,11 @@ class ServeEngine:
             r.token_times.append(self.now)
             if r.first_token_t is None:
                 r.first_token_t = self.now
+                self._m_ttft[r.slo.kind].observe(self.now - r.arrival,
+                                                 t=self.now)
+                if self._trace:
+                    self.tracer.event("first_token", r.rid, self.now,
+                                      self.replica)
             if r.done:
                 r.state = ReqState.FINISHED
                 r.finish_t = self.now
@@ -524,6 +653,14 @@ class ServeEngine:
                 self.backend.kv_release(r.rid)
                 self.finished.append(r)
                 finished_now.append(r)
+                self._m_finished.inc(t=self.now)
+                if r.decoded > 1 and r.first_token_t is not None:
+                    self._m_tpot[r.slo.kind].observe(
+                        (self.now - r.first_token_t) / (r.decoded - 1),
+                        t=self.now)
+                if self._trace:
+                    self.tracer.event("finish", r.rid, self.now,
+                                      self.replica, decoded=r.decoded)
         for r in finished_now:
             self.sched.on_finish(r, self._view())
             if r.dag_id is not None:

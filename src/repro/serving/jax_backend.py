@@ -111,6 +111,12 @@ class PagedJaxBackend(Backend):
         self._host: Dict[int, object] = {}       # swapped-out page contents
         self._seed = seed
         self._t_acc = 0.0
+        self._host_t0 = 0.0
+        self._pages_step = 0
+        # padded dispatch shapes seen so far — each new (kind, size) bucket
+        # is one XLA compile (the recompile-count proxy the profiler
+        # reports; compile time lands in measured step time regardless)
+        self._shapes: set = set()
         self._page_shardings = None
         if self.mesh is None:
             self._prefill = jax.jit(self.model.prefill_paged)
@@ -127,6 +133,25 @@ class PagedJaxBackend(Backend):
         self.num_blocks = pool
         self.kv_bytes = float(self.model.kv_bytes_per_token())
         self.kv_shard_degree = self.tp if self.plan["attn"] else 1
+        self.attach_obs(self.obs)       # resolve no-op instruments
+
+    def attach_obs(self, obs) -> None:
+        """Bind the run's metrics registry and pre-resolve the backend's
+        instruments (DESIGN.md §9).  The engine calls this at
+        construction; until then the class-level no-op registry holds."""
+        self.obs = obs
+        self._m_device = obs.counter(
+            "jax_device_seconds_total",
+            "wall time inside jitted device dispatches")
+        self._m_host = obs.counter(
+            "jax_host_seconds_total",
+            "host-side step time outside device dispatches")
+        self._m_pages = obs.counter(
+            "jax_pages_touched_total",
+            "block-table pages referenced by dispatches")
+        self._m_compile = obs.counter(
+            "jax_recompile_total",
+            "new padded dispatch shapes (XLA compiles)")
 
     def _build_sharded_step_fns(self) -> None:
         """jit(shard_map(...)) wrappers around the paged entry points.
@@ -198,6 +223,8 @@ class PagedJaxBackend(Backend):
     # ------------------------------------------------------------------
     def begin_step(self) -> None:
         self._t_acc = 0.0
+        self._pages_step = 0
+        self._host_t0 = time.perf_counter()
 
     def prefill_chunk(self, req, start: int, n: int,
                       block_table: List[int]) -> None:
@@ -208,6 +235,10 @@ class PagedJaxBackend(Backend):
                 "workload (WorkloadSpec.prompt_cap/output_cap)")
         prompt = self.prompt_ids(req)
         C = _bucket(n)
+        if ("prefill", C) not in self._shapes:
+            self._shapes.add(("prefill", C))
+            self._m_compile.inc()
+        self._pages_step += len(block_table)
         toks = np.zeros(C, np.int32)
         toks[:n] = prompt[start:start + n]
         t0 = time.perf_counter()
@@ -230,6 +261,10 @@ class PagedJaxBackend(Backend):
         if not reqs:
             return
         B = _bucket(len(reqs), lo=1)
+        if ("decode", B) not in self._shapes:
+            self._shapes.add(("decode", B))
+            self._m_compile.inc()
+        self._pages_step += sum(len(t) for t in tables)
         toks = np.zeros((B, 1), np.int32)
         pos = np.zeros(B, np.int32)
         tabs = np.full((B, self.n_max), self.scrap, np.int32)
@@ -298,4 +333,12 @@ class PagedJaxBackend(Backend):
     # ------------------------------------------------------------------
     def step_time(self, prefill_tokens: int,
                   decode_ctxs: List[int]) -> float:
+        if self.obs.enabled:
+            # host share = wall since begin_step minus accumulated device
+            # time; real wall-clock values, metrics-only (never fed back
+            # into the simulated clock, so determinism is untouched)
+            wall = time.perf_counter() - self._host_t0
+            self._m_device.inc(self._t_acc)
+            self._m_host.inc(max(wall - self._t_acc, 0.0))
+            self._m_pages.inc(self._pages_step)
         return self.overhead + self._t_acc

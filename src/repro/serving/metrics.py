@@ -14,10 +14,18 @@ from repro.core.service import ServiceModel
 from repro.serving.request import Request
 
 
-def _pctl(xs: Sequence[float], p: float) -> float:
+def _pctl(xs: Sequence[float], p: float) -> Optional[float]:
+    """Percentile, or None when there are no samples.  None (JSON null)
+    rather than NaN: NaN poisons JSON round-trips and baseline
+    comparisons — ``benchmarks/check.py`` treats null/absent percentile
+    cells as "no samples", never as a regression."""
     if not xs:
-        return float("nan")
+        return None
     return float(np.percentile(np.asarray(xs), p))
+
+
+def _round(x: Optional[float], nd: int) -> Optional[float]:
+    return None if x is None else round(x, nd)
 
 
 @dataclasses.dataclass
@@ -48,6 +56,14 @@ class Summary:
     cached_tokens: int = 0          # prompt tokens served from cache
     prefix_hits: int = 0
     prefix_lookups: int = 0
+    # scheduler/engine telemetry roll-ups (PR 6): JIT deferral
+    # transitions, margin-refresh quanta (gmg; zero for other
+    # schedulers), and the StepCostModel's |prediction − actual| step-time
+    # residual percentiles (None until the model has fitted)
+    deferrals: int = 0
+    quanta: int = 0
+    cost_residual_p50: Optional[float] = None
+    cost_residual_p95: Optional[float] = None
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -70,7 +86,10 @@ class Summary:
                     tok_s=round(self.throughput_tok_s, 1),
                     makespan=round(self.makespan, 1),
                     cached_frac=round(self.cached_frac, 4),
-                    prefix_hit_rate=round(self.prefix_hit_rate, 4))
+                    prefix_hit_rate=round(self.prefix_hit_rate, 4),
+                    deferrals=self.deferrals, quanta=self.quanta,
+                    resid_p50=_round(self.cost_residual_p50, 6),
+                    resid_p95=_round(self.cost_residual_p95, 6))
 
 
 def summarize(name: str, finished: List[Request], service: ServiceModel,
@@ -79,7 +98,9 @@ def summarize(name: str, finished: List[Request], service: ServiceModel,
               prefill_tokens: int = 0, cached_tokens: int = 0,
               prefix_hits: int = 0, prefix_lookups: int = 0,
               n_admitted: Optional[int] = None,
-              shed: Optional[List[Request]] = None) -> Summary:
+              shed: Optional[List[Request]] = None,
+              deferrals: int = 0, quanta: int = 0,
+              cost_residuals: Optional[Sequence[float]] = None) -> Summary:
     """Aggregate a run.  ``n_admitted`` is the count of requests the
     engine(s) admitted — shed and never-finished requests are (n_admitted
     − n_finished) and count as SLO misses in ``goodput_frac``.  Omitting
@@ -128,6 +149,7 @@ def summarize(name: str, finished: List[Request], service: ServiceModel,
             timeline[min(int(r.finish_t // bucket), nb - 1)] += \
                 service.realized_gain(r)
 
+    resid_abs = [abs(x) for x in (cost_residuals or ())]
     return Summary(
         scheduler=name, n_finished=len(finished), service_gain=gain,
         max_gain=maxg, goodput_rps=len(met) / mk,
@@ -136,7 +158,10 @@ def summarize(name: str, finished: List[Request], service: ServiceModel,
         gain_timeline=timeline, preemptions=preemptions,
         n_admitted=n_adm, n_shed=len(shed),
         prefill_tokens=prefill_tokens, cached_tokens=cached_tokens,
-        prefix_hits=prefix_hits, prefix_lookups=prefix_lookups)
+        prefix_hits=prefix_hits, prefix_lookups=prefix_lookups,
+        deferrals=deferrals, quanta=quanta,
+        cost_residual_p50=_pctl(resid_abs, 50),
+        cost_residual_p95=_pctl(resid_abs, 95))
 
 
 # ---------------------------------------------------------------------------
@@ -178,7 +203,11 @@ def summarize_fleet(router: str, scheduler: str,
                         Dict[int, Tuple[int, int, int, int]]] = None,
                     admitted_by_replica: Optional[Dict[int, int]] = None,
                     shed_by_replica: Optional[
-                        Dict[int, List[Request]]] = None
+                        Dict[int, List[Request]]] = None,
+                    deferrals_by_replica: Optional[Dict[int, int]] = None,
+                    quanta_by_replica: Optional[Dict[int, int]] = None,
+                    residuals_by_replica: Optional[
+                        Dict[int, Sequence[float]]] = None
                     ) -> FleetSummary:
     all_fin: List[Request] = [r for fin in finished_by_replica.values()
                               for r in fin]
@@ -189,19 +218,27 @@ def summarize_fleet(router: str, scheduler: str,
         if pfx else [0, 0, 0, 0]
     adm = admitted_by_replica or {}
     shd = shed_by_replica or {}
+    dfr = deferrals_by_replica or {}
+    qta = quanta_by_replica or {}
+    rsd = residuals_by_replica or {}
+    all_resid: List[float] = [x for rs in rsd.values() for x in rs]
     all_shed: List[Request] = [r for s in shd.values() for r in s]
     fleet = summarize(f"{scheduler}@{router}", all_fin, service, makespan,
                       preemptions=preemptions,
                       prefill_tokens=tot[0], cached_tokens=tot[1],
                       prefix_hits=tot[2], prefix_lookups=tot[3],
                       n_admitted=sum(adm.values()) if adm else None,
-                      shed=all_shed)
+                      shed=all_shed,
+                      deferrals=sum(dfr.values()), quanta=sum(qta.values()),
+                      cost_residuals=all_resid)
     pbr = preempt_by_replica or {}
     per_replica = {
         rid: summarize(f"{scheduler}@{router}/r{rid}", fin, service,
                        makespan, preemptions=pbr.get(rid, 0),
                        n_admitted=adm.get(rid),
                        shed=shd.get(rid),
+                       deferrals=dfr.get(rid, 0), quanta=qta.get(rid, 0),
+                       cost_residuals=rsd.get(rid),
                        **dict(zip(("prefill_tokens", "cached_tokens",
                                    "prefix_hits", "prefix_lookups"),
                                   pfx.get(rid, (0, 0, 0, 0)))))

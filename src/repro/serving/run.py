@@ -15,6 +15,7 @@ from typing import Dict, List, Optional, Union
 
 from repro.core.baselines import make_scheduler
 from repro.core.service import ServiceModel
+from repro.obs import MetricsRegistry, Tracer, dump_all
 from repro.serving.backend import Backend
 from repro.serving.engine import EngineConfig, ServeEngine, SimBackend
 from repro.serving.metrics import (FleetSummary, Summary, summarize,
@@ -62,9 +63,19 @@ def run_experiment(scheduler: str = "tempo",
                    service: Optional[ServiceModel] = None,
                    warmup: int = 512,
                    sched_kwargs: Optional[Dict] = None,
-                   backend_kwargs: Optional[Dict] = None) -> Summary:
+                   backend_kwargs: Optional[Dict] = None,
+                   obs=None, tracer=None,
+                   metrics_out: Optional[str] = None) -> Summary:
+    """``metrics_out`` enables telemetry with one flag: a registry and
+    tracer are created (unless passed in) and flushed to the directory as
+    Prometheus text exposition, a JSON snapshot, trace JSONL, and a
+    Chrome trace (DESIGN.md §9).  With all three left None telemetry is
+    the zero-cost no-op path."""
     spec = spec or WorkloadSpec()
     engine_cfg = engine_cfg or EngineConfig()
+    if metrics_out:
+        obs = obs if obs is not None else MetricsRegistry()
+        tracer = tracer if tracer is not None else Tracer()
     backend = make_backend(backend, _with_tp(backend, backend_kwargs,
                                              engine_cfg))
     service = service or ServiceModel()
@@ -80,7 +91,8 @@ def run_experiment(scheduler: str = "tempo",
             pred.warm_start(gen.warmup_requests(warmup))
 
     singles, dags = gen.generate()
-    eng = ServeEngine(backend, sched, engine_cfg, workload=gen)
+    eng = ServeEngine(backend, sched, engine_cfg, workload=gen,
+                      obs=obs, tracer=tracer)
     eng.load(singles, dags)
     finished = eng.run()
     # the denominator counts everything submitted: admitted (finished,
@@ -88,14 +100,21 @@ def run_experiment(scheduler: str = "tempo",
     # ended, and unspawned DAG stages — none may silently vanish from
     # goodput_frac
     n_submitted = eng.submitted_count
-    return summarize(sched.name if hasattr(sched, "name") else scheduler,
+    summ = summarize(sched.name if hasattr(sched, "name") else scheduler,
                      finished, service, eng.now,
                      preemptions=eng.preempt_count,
                      prefill_tokens=eng.prefill_computed,
                      cached_tokens=eng.cached_tokens,
                      prefix_hits=eng.prefix_hits,
                      prefix_lookups=eng.prefix_lookups,
-                     n_admitted=n_submitted, shed=eng.shed)
+                     n_admitted=n_submitted, shed=eng.shed,
+                     deferrals=getattr(sched, "n_deferrals", 0),
+                     quanta=getattr(sched, "n_quanta", 0),
+                     cost_residuals=eng.cost_residuals)
+    if metrics_out:
+        dump_all(metrics_out, registry=obs, tracer=tracer,
+                 extra=summ.row())
+    return summ
 
 
 # ---------------------------------------------------------------------------
@@ -111,7 +130,9 @@ def run_cluster_experiment(scheduler: str = "tempo",
                            autoscale: bool = False,
                            autoscaler_cfg=None,
                            backend: Union[str, Backend, None] = None,
-                           backend_kwargs: Optional[Dict] = None
+                           backend_kwargs: Optional[Dict] = None,
+                           obs=None, tracer=None,
+                           metrics_out: Optional[str] = None
                            ) -> FleetSummary:
     """Serve one workload across ``n_replicas`` co-simulated replicas.
 
@@ -131,6 +152,9 @@ def run_cluster_experiment(scheduler: str = "tempo",
     spec = spec or WorkloadSpec()
     engine_cfg = engine_cfg or EngineConfig()
     service = service or ServiceModel()
+    if metrics_out:
+        obs = obs if obs is not None else MetricsRegistry()
+        tracer = tracer if tracer is not None else Tracer()
     # every replica runs the SAME model: a fresh backend per replica (own
     # device page pool / timers), built from the same backend spec
     if backend_factory is None:
@@ -170,8 +194,13 @@ def run_cluster_experiment(scheduler: str = "tempo",
                 if not warm:
                     warm.append(gen.warmup_requests(warmup))
                 pred.warm_start(warm[0])
+        # each replica reports into a labeled view of the fleet registry
+        # (one instrument per metric × replica) and the shared tracer
         return ServeEngine(backend_factory(rid), sched,
-                           dataclasses.replace(engine_cfg), workload=gen)
+                           dataclasses.replace(engine_cfg), workload=gen,
+                           obs=None if obs is None
+                           else obs.labeled(replica=rid),
+                           tracer=tracer, replica=rid)
 
     if isinstance(router, str):
         # a caller-supplied router INSTANCE keeps its own ServiceModel
@@ -183,25 +212,39 @@ def run_cluster_experiment(scheduler: str = "tempo",
     scaler = Autoscaler(autoscaler_cfg or AutoscalerConfig(),
                         service=service) if autoscale else None
     cluster = ClusterEngine(replica_factory, rt, n_replicas=n_replicas,
-                            autoscaler=scaler)
+                            autoscaler=scaler, obs=obs)
     finished = cluster.run(gen.arrival_stream())
-    return summarize_fleet(rt.name, scheduler, finished, service,
-                           cluster.makespan,
-                           replica_timeline=cluster.replica_timeline,
-                           routed=cluster.routed,
-                           preemptions=cluster.preempt_count,
-                           preempt_by_replica={
-                               rep.rid: rep.engine.preempt_count
-                               for rep in cluster.replicas},
-                           prefix_by_replica={
-                               rep.rid: (rep.engine.prefill_computed,
-                                         rep.engine.cached_tokens,
-                                         rep.engine.prefix_hits,
-                                         rep.engine.prefix_lookups)
-                               for rep in cluster.replicas},
-                           admitted_by_replica={
-                               rep.rid: rep.engine.submitted_count
-                               for rep in cluster.replicas},
-                           shed_by_replica={
-                               rep.rid: rep.engine.shed
-                               for rep in cluster.replicas})
+    fs = summarize_fleet(rt.name, scheduler, finished, service,
+                         cluster.makespan,
+                         replica_timeline=cluster.replica_timeline,
+                         routed=cluster.routed,
+                         preemptions=cluster.preempt_count,
+                         preempt_by_replica={
+                             rep.rid: rep.engine.preempt_count
+                             for rep in cluster.replicas},
+                         prefix_by_replica={
+                             rep.rid: (rep.engine.prefill_computed,
+                                       rep.engine.cached_tokens,
+                                       rep.engine.prefix_hits,
+                                       rep.engine.prefix_lookups)
+                             for rep in cluster.replicas},
+                         admitted_by_replica={
+                             rep.rid: rep.engine.submitted_count
+                             for rep in cluster.replicas},
+                         shed_by_replica={
+                             rep.rid: rep.engine.shed
+                             for rep in cluster.replicas},
+                         deferrals_by_replica={
+                             rep.rid: getattr(rep.engine.sched,
+                                              "n_deferrals", 0)
+                             for rep in cluster.replicas},
+                         quanta_by_replica={
+                             rep.rid: getattr(rep.engine.sched,
+                                              "n_quanta", 0)
+                             for rep in cluster.replicas},
+                         residuals_by_replica={
+                             rep.rid: rep.engine.cost_residuals
+                             for rep in cluster.replicas})
+    if metrics_out:
+        dump_all(metrics_out, registry=obs, tracer=tracer, extra=fs.row())
+    return fs

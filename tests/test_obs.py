@@ -1,0 +1,288 @@
+"""Fleet telemetry subsystem (DESIGN.md §9): registry primitives,
+Prometheus exposition round-trip, lifecycle-trace completeness, the
+zero-cost disabled path, digest invariance with telemetry on, and the
+dashboard renderer."""
+
+import json
+import math
+import os
+import time
+
+import pytest
+
+from repro.obs import (NULL, NULL_TRACER, MetricsRegistry, Tracer,
+                       parse_prometheus, to_prometheus)
+from repro.obs.export import dump_all
+from repro.serving.run import run_cluster_experiment, run_experiment
+from repro.serving.workload import WorkloadSpec
+
+SPEC = WorkloadSpec(rate=8.0, duration=10.0, seed=1)
+
+
+# ---------------------------------------------------------------------------
+# Registry primitives
+# ---------------------------------------------------------------------------
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("reqs_total", "requests", kind="a")
+    c.inc()
+    c.inc(3, t=1.5)
+    assert c.total == 4.0
+    assert reg.counter("reqs_total", kind="a") is c       # identity by
+    assert reg.counter("reqs_total", kind="b") is not c   # (name, labels)
+    g = reg.gauge("depth")
+    g.set(7.0, t=2.0)
+    assert g.value == 7.0
+    h = reg.histogram("lat", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 0.5, 5.0):
+        h.observe(v)
+    assert h.count == 4 and abs(h.sum - 6.05) < 1e-9
+    p = h.percentile(50)
+    assert 0.1 <= p <= 1.0
+    assert reg.histogram("empty").percentile(95) is None
+
+
+def test_ring_buffer_is_bounded():
+    reg = MetricsRegistry()
+    g = reg.gauge("hot")
+    for i in range(5000):
+        g.set(float(i), t=float(i))
+    series = g.series()
+    assert len(series) == 2048                 # DEFAULT_RING
+    assert series[-1] == (4999.0, 4999.0)      # newest kept, oldest dropped
+
+
+def test_labeled_view_shares_root_table():
+    reg = MetricsRegistry()
+    view = reg.labeled(replica=3)
+    view.counter("engine_finished_total").inc(2)
+    insts = reg.find("engine_finished_total", replica=3)
+    assert len(insts) == 1 and insts[0].total == 2.0
+    # nested labels merge
+    view.counter("x", kind="latency").inc()
+    assert reg.value_of("x", replica=3, kind="latency") == 1.0
+
+
+def test_null_registry_allocates_nothing():
+    before = len(NULL.instruments())
+    NULL.counter("a").inc()
+    NULL.labeled(replica=1).gauge("b").set(2)
+    NULL.histogram("c").observe(0.5)
+    assert len(NULL.instruments()) == before == 0
+    assert NULL.snapshot() == {"metrics": []}
+    NULL_TRACER.event("admit", 1, 0.0)
+    assert not NULL_TRACER.enabled
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition
+# ---------------------------------------------------------------------------
+def test_prometheus_round_trip():
+    reg = MetricsRegistry()
+    reg.counter("reqs_total", "requests served", slo="latency").inc(5)
+    reg.gauge("kv_frac", "pressure").set(0.75)
+    h = reg.histogram("step_s", "step seconds", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    text = to_prometheus(reg)
+    parsed = parse_prometheus(text)
+    assert parsed["types"]["reqs_total"] == "counter"
+    assert parsed["types"]["step_s"] == "histogram"
+    samples = {(name, tuple(sorted(labels.items()))): value
+               for name, labels, value in parsed["samples"]}
+    assert samples[("reqs_total", (("slo", "latency"),))] == 5.0
+    assert samples[("kv_frac", ())] == 0.75
+    assert samples[("step_s_count", ())] == 2.0
+    # cumulative buckets
+    assert samples[("step_s_bucket", (("le", "0.1"),))] == 1.0
+    assert samples[("step_s_bucket", (("le", "+Inf"),))] == 2.0
+
+
+def test_prometheus_label_escaping_round_trip():
+    reg = MetricsRegistry()
+    reg.counter("c", "weird", path='a"b\\c\nd').inc()
+    parsed = parse_prometheus(to_prometheus(reg))
+    assert parsed["samples"][0][1]["path"] == 'a"b\\c\nd'
+
+
+@pytest.mark.parametrize("bad", [
+    "no_type_header 1.0\n",
+    "# TYPE x counter\nx{le=} 1.0\n",
+    "# TYPE x counter\nx notanumber\n",
+    "# TYPE x counter\nx{a=\"1\"",
+])
+def test_prometheus_parser_rejects_malformed(bad):
+    with pytest.raises(ValueError):
+        parse_prometheus(bad)
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: disabled path, trace completeness, summary columns
+# ---------------------------------------------------------------------------
+def test_disabled_telemetry_default_allocates_no_instruments():
+    s = run_experiment("gmg", spec=SPEC)
+    assert len(NULL.instruments()) == 0
+    assert s.n_finished > 0
+
+
+def test_gmg_run_metrics_and_trace_complete(tmp_path):
+    obs, tracer = MetricsRegistry(), Tracer()
+    s = run_experiment("gmg", spec=SPEC, obs=obs, tracer=tracer,
+                       metrics_out=str(tmp_path))
+    # core engine metrics exist and are consistent with the summary
+    assert obs.value_of("engine_finished_total") == s.n_finished
+    assert obs.value_of("engine_admitted_total") >= s.n_finished
+    assert obs.value_of("sched_quanta_total") == s.quanta > 0
+    steps = obs.find("engine_step_seconds")
+    assert sum(i.count for i in steps) > 0
+    # every admitted chain reaches a terminal event
+    assert tracer.incomplete_rids() == set()
+    # timestamps per chain are monotone
+    for rid in list(tracer.terminal_rids())[:50]:
+        ts = [e["t"] for e in tracer.chain(rid)]
+        assert ts == sorted(ts)
+    # dump + the CI validator agree
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "scripts"))
+    import validate_obs
+    assert validate_obs.validate_dir(str(tmp_path)) == []
+    # chrome trace loads and has complete spans
+    chrome = json.loads((tmp_path / "trace_chrome.json").read_text())
+    assert any(ev.get("ph") == "X" for ev in chrome["traceEvents"])
+
+
+def test_summary_rows_carry_telemetry_columns():
+    s = run_experiment("gmg", spec=SPEC)
+    row = s.row()
+    for col in ("deferrals", "quanta", "resid_p50", "resid_p95"):
+        assert col in row
+    assert row["quanta"] > 0
+    assert row["resid_p50"] is None or row["resid_p50"] >= 0
+
+
+def test_cluster_metrics_labeled_per_replica(tmp_path):
+    obs = MetricsRegistry()
+    fs = run_cluster_experiment("gmg", spec=SPEC, n_replicas=2, obs=obs,
+                                metrics_out=str(tmp_path))
+    for rid in (0, 1):
+        assert obs.find("engine_kv_used_frac", replica=rid)
+    assert obs.find("router_routed_total")
+    assert obs.value_of("cluster_active_replicas") == 2
+    assert sum(i.total for i in obs.find("engine_finished_total")) \
+        == fs.fleet.n_finished
+    assert (tmp_path / "metrics.prom").exists()
+
+
+# ---------------------------------------------------------------------------
+# Cost: <5% overhead with telemetry enabled (satellite 3b)
+# ---------------------------------------------------------------------------
+def test_gmg_sim_overhead_under_5_percent():
+    spec = WorkloadSpec(rate=8.0, duration=8.0, seed=2)
+    run_experiment("gmg", spec=spec)           # warm caches/imports
+
+    def measure(reps):
+        """Interleaved best-of-N: drift and noisy-neighbor load hit the
+        on/off arms alike, and min() discards the slow outliers."""
+        t_off, t_on = math.inf, math.inf
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            run_experiment("gmg", spec=spec)
+            t_off = min(t_off, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            run_experiment("gmg", spec=spec, obs=MetricsRegistry(),
+                           tracer=Tracer())
+            t_on = min(t_on, time.perf_counter() - t0)
+        return t_on / t_off
+
+    ratio = measure(3)
+    if ratio > 1.05:                           # one retry rides out load
+        ratio = min(ratio, measure(5))
+    assert ratio <= 1.05, \
+        f"telemetry overhead {ratio - 1:+.1%} exceeds 5%"
+
+
+# ---------------------------------------------------------------------------
+# Determinism: stream digests byte-identical with telemetry on/off (jax)
+# ---------------------------------------------------------------------------
+def _digest_jax_run(telemetry: bool):
+    import hashlib
+
+    from repro.serving.engine import EngineConfig
+    from repro.serving.run import make_backend
+
+    spec = WorkloadSpec(rate=1.5, duration=4.0, seed=0, mix=(2, 1, 1),
+                        prompt_cap=40, output_cap=12, slo_scale=20.0)
+    kw = dict(arch="tinyllama-1.1b", num_blocks=64, page=16, max_len=128,
+              seed=0)
+    backend = make_backend("jax", kw)
+    extra = dict(obs=MetricsRegistry(), tracer=Tracer()) if telemetry \
+        else {}
+    s = run_experiment("tempo", spec=spec,
+                       engine_cfg=EngineConfig(max_batch=8,
+                                               prefill_budget=32),
+                       backend=backend, backend_kwargs=kw, **extra)
+    streams = sorted((rid, tuple(t)) for rid, t in
+                     backend.generated.items())
+    return hashlib.sha256(repr(streams).encode()).hexdigest(), s.row()
+
+
+def test_jax_stream_digest_identical_with_telemetry():
+    d_off, row_off = _digest_jax_run(False)
+    d_on, row_on = _digest_jax_run(True)
+    assert d_on == d_off
+    # jax rows carry wall-clock-derived fields (makespan, tok_s, resid
+    # percentiles from measured step times) that vary run-to-run even
+    # without telemetry; only the counting fields are run-stable
+    for k in ("scheduler", "n", "n_admitted", "n_shed", "n_finished",
+              "deferrals", "quanta"):
+        if k in row_off:
+            assert row_on[k] == row_off[k], k
+
+
+# ---------------------------------------------------------------------------
+# Dashboard
+# ---------------------------------------------------------------------------
+def test_dashboard_report_renders(tmp_path):
+    from repro.launch.dashboard import render_report, write_report
+    obs, tracer = MetricsRegistry(), Tracer()
+    run_experiment("gmg", spec=SPEC, obs=obs, tracer=tracer,
+                   metrics_out=str(tmp_path))
+    path = write_report(str(tmp_path))
+    text = open(path).read()
+    assert text.count("<svg") >= 3              # timeline, census, KV
+    assert "Margin-group census" in text
+    assert "prefers-color-scheme" in text and "data-theme=dark" in text
+    assert "table view" in text                 # table under every chart
+    # empty snapshot degrades gracefully, never raises
+    empty = render_report({"metrics": []}, {})
+    assert "no samples" in empty
+
+
+# ---------------------------------------------------------------------------
+# check.py: null/NaN percentile cells mean "no samples", not a regression
+# ---------------------------------------------------------------------------
+def test_check_rows_skips_none_and_nan_metrics():
+    from benchmarks.check import check_rows
+    base = [dict(bench="b", scheduler="s", goodput_frac=None,
+                 gain_frac=float("nan"), prefix_hit_rate=0.5)]
+    fresh = [dict(bench="b", scheduler="s", goodput_frac=0.9,
+                  gain_frac=0.9, prefix_hit_rate=0.5)]
+    assert check_rows("b", fresh, base) == []
+    # symmetric: fresh NaN against a real baseline also skips
+    base2 = [dict(bench="b", scheduler="s", goodput_frac=0.9)]
+    fresh2 = [dict(bench="b", scheduler="s", goodput_frac=float("nan"))]
+    assert check_rows("b", fresh2, base2) == []
+    # a REAL regression still fails
+    fresh3 = [dict(bench="b", scheduler="s", goodput_frac=0.5)]
+    assert check_rows("b", fresh3, base2)
+
+
+def test_dump_all_writes_expected_files(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("c").inc()
+    paths = dump_all(str(tmp_path), registry=reg, tracer=Tracer(),
+                     extra={"k": 1})
+    names = sorted(os.path.basename(p) for p in paths)
+    assert names == ["metrics.json", "metrics.prom", "summary.json",
+                     "trace.jsonl", "trace_chrome.json"]

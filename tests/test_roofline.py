@@ -82,6 +82,25 @@ def test_model_flops_conventions():
     assert dc == 2.0 * n * 128
 
 
+def test_roofline_decode_step_smoke():
+    """Profile one real paged decode dispatch end-to-end: HLO-walked
+    costs, analytic FLOPs, measured time, and registry gauges."""
+    from repro.launch.roofline import roofline_decode_step
+    from repro.obs import MetricsRegistry
+
+    reg = MetricsRegistry()
+    rec = roofline_decode_step(batch=1, num_blocks=2, page=8, max_len=16,
+                               repeats=1, registry=reg)
+    assert rec["measured_s"] > 0
+    assert rec["model_flops"] > 0
+    assert rec["roofline_s"] > 0
+    assert rec["dominant"] in ("compute", "memory", "collective")
+    # interpret-mode Pallas traces to plain HLO: the walker sees the dots
+    assert not rec["hlo_opaque"] and rec["hlo_flops_per_chip"] > 0
+    assert reg.value_of("roofline_decode_measured_s", batch="1") \
+        == rec["measured_s"]
+
+
 def test_parse_hlo_handles_tuple_types_with_comments():
     txt = """HloModule m
 

@@ -173,6 +173,33 @@ def test_tp2_prefix_cache_cow_byte_identical_on_vs_off():
 
 
 @need2
+def test_tp2_streams_identical_with_telemetry():
+    """Telemetry must be observation-only on the sharded path too: a tp=2
+    run with registry+tracer attached emits byte-identical streams (and
+    records real backend profiling counters)."""
+    from repro.obs import MetricsRegistry, Tracer
+
+    def run_obs(telemetry):
+        be = PagedJaxBackend(num_blocks=4, page=16, max_len=64, seed=0,
+                             tp=2)
+        extra = dict(obs=MetricsRegistry(), tracer=Tracer()) \
+            if telemetry else {}
+        eng = ServeEngine(be, make_scheduler("tempo", use_predictor=False),
+                          EngineConfig(max_batch=2, prefill_budget=16,
+                                       tp=2), **extra)
+        eng.load(_mk_reqs(n=2), [])
+        fin = eng.run()
+        streams = {r.rid: list(be.generated[r.rid]) for r in fin}
+        return streams, extra.get("obs")
+
+    s_off, _ = run_obs(False)
+    s_on, obs = run_obs(True)
+    assert s_on == s_off
+    assert obs.value_of("jax_recompile_total") > 0
+    assert obs.value_of("jax_device_seconds_total") > 0
+
+
+@need2
 def test_cluster_replicas_with_tp_meshes():
     """2 replicas × tp=2 meshes (distinct device slices): the fleet
     serves real sharded work and per-token texts match a tp=1 fleet."""
