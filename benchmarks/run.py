@@ -76,6 +76,7 @@ def main() -> None:
     from benchmarks import check as checkmod
     from benchmarks.common import save
     from benchmarks.cluster_sweep import ALL as CLUSTER
+    from benchmarks.decode_speed import ALL as DECODE_SPEED
     from benchmarks.gmg import ALL as GMG
     from benchmarks.paper_figs import ALL
     from benchmarks.prefix_reuse import ALL as PREFIX
@@ -84,6 +85,7 @@ def main() -> None:
     benches.update(CLUSTER)
     benches.update(PREFIX)
     benches.update(GMG)
+    benches.update(DECODE_SPEED)
     benches["kernels"] = lambda quick=True: _kernel_bench()
     names = [n for n in benches if (not args.only or args.only in n)]
     baselines = {}
@@ -131,6 +133,9 @@ def main() -> None:
         if "gmg" in fresh:
             from benchmarks.gmg import check as gmg_check
             code = gmg_check(fresh["gmg"]) or code
+        if "decode_speed" in fresh:
+            from benchmarks.decode_speed import check as ds_check
+            code = ds_check(fresh["decode_speed"]) or code
         sys.exit(code)
 
 

@@ -55,6 +55,10 @@ def main() -> None:
                     default="mixed",
                     help="mixed SLO traffic, or the prefix-reuse workloads "
                     "(multi-turn chat / agentic chains)")
+    ap.add_argument("--decode-steps", type=int, default=1,
+                    help="decode micro-steps per device dispatch on stable "
+                    "decode-only steps (jax backend; DESIGN.md §10). Token "
+                    "streams are byte-identical to --decode-steps 1")
     ap.add_argument("--prefix-cache", dest="prefix_cache",
                     action="store_true", default=True,
                     help="shared-prefix KV reuse (default on)")
@@ -81,7 +85,8 @@ def main() -> None:
                                 output_cap=4, slo_scale=50.0)
         engine_cfg = EngineConfig(max_batch=8, prefill_budget=32,
                                   prefix_cache=args.prefix_cache,
-                                  tp=args.tp)
+                                  tp=args.tp,
+                                  decode_steps=args.decode_steps)
         backend_kwargs = dict(arch="tinyllama-1.1b", num_blocks=64,
                               page=16, max_len=128, seed=0, tp=args.tp)
         schedulers = ("vllm", "tempo")

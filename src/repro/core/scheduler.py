@@ -84,6 +84,15 @@ class SchedulerBase:
     def schedule(self, view: EngineView) -> Decision:
         raise NotImplementedError
 
+    def decode_horizon(self, view: EngineView) -> int:
+        """How many decode micro-steps the engine may run in one dispatch
+        before this scheduler needs to see the world again (DESIGN.md §10).
+        The engine further caps this by arrivals, per-request remaining
+        output, and KV headroom; schedulers with step-granular state
+        (quanta, pacing) override to their next boundary.  The base class
+        has no step-coupled state, so any horizon is safe."""
+        return 1 << 10
+
 
 # ---------------------------------------------------------------------------
 # Shared Request-Analyzer machinery (Algorithm 1: AnalyzeRequest)
@@ -172,6 +181,13 @@ class AnalyzedSchedulerBase(SchedulerBase):
 
     def _priority_raw(self, req: Request, view: EngineView) -> float:
         raise NotImplementedError
+
+    def decode_horizon(self, view: EngineView) -> int:
+        """Multi-step dispatch may run at most to the next quanta boundary:
+        priority refresh, membership changes, and preemption all happen
+        there, so skipping past it would let a stale batch outlive its
+        time slice."""
+        return max(1, self.quanta - (view.step - self._prio_step))
 
     def _refresh_priorities(self, view: EngineView, reqs) -> None:
         stale = (view.step - self._prio_step) >= self.quanta

@@ -81,6 +81,138 @@ def _kernel(tables_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = out.reshape(H, D).astype(o_ref.dtype)
 
 
+def _fused_kernel(tables_ref, ctx_ref, pos_ref, q_ref, kn_ref, vn_ref,
+                  k_ref, v_ref, o_ref, ko_ref, vo_ref,
+                  m_scr, l_scr, acc_scr, *, scale: float, page: int,
+                  npages: int, G: int):
+    """Append-then-attend in one grid pass (fused decode).
+
+    Identical online-softmax body to ``_kernel``, except that when this
+    grid cell holds the page the step's new token writes into
+    (j == pos[b] // page), the new K/V row is spliced into the VMEM copy
+    BEFORE attending, and the updated page is written back through the
+    aliased page-pool output.  Cells that do not own the write route
+    their (unchanged) page copy to the scrap page — see
+    ``fused_decode_attention``."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    off = pos_ref[b] % page
+    k = k_ref[0]                                       # (page, KV, D)
+    v = v_ref[0]
+    sel = (jax.lax.broadcasted_iota(jnp.int32, k.shape, 0) == off) \
+        & (j == pos_ref[b] // page)
+    k = jnp.where(sel, kn_ref[0][None].astype(k.dtype), k)
+    v = jnp.where(sel, vn_ref[0][None].astype(v.dtype), v)
+    ko_ref[0] = k
+    vo_ref[0] = v
+
+    q = q_ref[0].astype(jnp.float32)                   # (H, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    H, D = q.shape
+    KV = kf.shape[1]
+    qg = q.reshape(KV, G, D)
+
+    s = jax.lax.dot_general(
+        qg, kf, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32) * scale     # (KV, G, page)
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (KV, G, page), 2)
+    live = pos < ctx_ref[b]
+    s = jnp.where(live, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=2))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=2)
+    pv = jax.lax.dot_general(
+        p, vf, (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr[..., None] + pv
+    m_scr[...] = m_new
+
+    @pl.when(j == npages - 1)
+    def _finish():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = out.reshape(H, D).astype(o_ref.dtype)
+
+
+def fused_decode_attention(q, k_new, v_new, k_pages, v_pages, block_tables,
+                           positions, *, scale=None, interpret: bool = False):
+    """Fused decode step: write each sequence's new KV entry into its page
+    and attend over it in the same grid pass (one dispatch instead of the
+    ``paged_kv_append_batch`` + ``paged_attention`` pair).
+
+    q: (B, H, D); k_new/v_new: (B, KV, D) this step's entries; positions:
+    (B,) the slot each entry occupies (context length BEFORE the token, so
+    ctx = positions + 1 is attended).  The page pool is passed through as
+    an aliased input/output: the kernel writes every visited page block
+    back, but only the cell owning the write position routes to its real
+    page — all other cells (and padded/finished lanes, whose tables are
+    all-scrap already) land on the scrap page (pool index P-1), which by
+    construction never appears in a live block table.  Returns
+    (out (B, H, D), k_pages, v_pages)."""
+    B, H, D = q.shape
+    P, page, KV, _ = k_pages.shape
+    n_max = block_tables.shape[1]
+    G = H // KV
+    scale = scale or D ** -0.5
+    ctx_lens = (positions + 1).astype(jnp.int32)
+
+    kernel = functools.partial(_fused_kernel, scale=scale, page=page,
+                               npages=n_max, G=G)
+
+    def kv_out_map(b, j, tab, ctx, pos):
+        # the write-back page: real page at the write cell, scrap elsewhere
+        return (jnp.where(j == pos[b] // page, tab[b, j], P - 1), 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, n_max),
+        in_specs=[
+            pl.BlockSpec((1, H, D),
+                         lambda b, j, tab, ctx, pos: (b, 0, 0)),
+            pl.BlockSpec((1, KV, D),
+                         lambda b, j, tab, ctx, pos: (b, 0, 0)),
+            pl.BlockSpec((1, KV, D),
+                         lambda b, j, tab, ctx, pos: (b, 0, 0)),
+            pl.BlockSpec((1, page, KV, D),
+                         lambda b, j, tab, ctx, pos: (tab[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, page, KV, D),
+                         lambda b, j, tab, ctx, pos: (tab[b, j], 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, D),
+                         lambda b, j, tab, ctx, pos: (b, 0, 0)),
+            pl.BlockSpec((1, page, KV, D), kv_out_map),
+            pl.BlockSpec((1, page, KV, D), kv_out_map),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((KV, G), jnp.float32),
+            pltpu.VMEM((KV, G), jnp.float32),
+            pltpu.VMEM((KV, G, D), jnp.float32),
+        ],
+    )
+    # aliases index the flattened pallas_call operands INCLUDING the three
+    # scalar-prefetch args: k_pages is operand 6, v_pages operand 7
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, H, D), q.dtype),
+                   jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+                   jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype)],
+        input_output_aliases={6: 1, 7: 2},
+        interpret=interpret,
+    )(block_tables, ctx_lens, positions.astype(jnp.int32),
+      q, k_new, v_new, k_pages, v_pages)
+
+
 def paged_kv_append(k_pages, v_pages, k_new, v_new, block_table, start,
                     n=None, scrap_page=None):
     """Chunked-prefill append: scatter a chunk of new KV entries into the

@@ -348,14 +348,23 @@ def roofline_terms(rec: dict) -> dict:
 def roofline_decode_step(arch: str = "tinyllama-1.1b", batch: int = 4,
                          num_blocks: int = 32, page: int = 16,
                          max_len: int = 64, repeats: int = 3,
-                         interpret: bool = True, registry=None) -> dict:
-    """Profile one paged decode dispatch end-to-end (DESIGN.md §9).
+                         interpret: bool = True, registry=None,
+                         steps: int = 1) -> dict:
+    """Profile one paged decode dispatch end-to-end (DESIGN.md §9, §10).
 
     Lowers+compiles the backend's jitted ``decode_paged`` at the padded
     batch bucket, walks the optimized HLO through ``analyze_compiled``,
     pairs it with the analytic 2·N·B decode FLOPs and a best-of-``repeats``
     measured wall time, and reports the roofline terms.  All numbers land
     in ``registry`` as ``roofline_decode_*`` gauges when one is passed.
+
+    With ``steps`` > 1 the record additionally profiles the §10 multi-step
+    scan dispatch (``decode_batch_n``'s compiled fn: fused append+attend
+    kernel + on-device sampling, ``steps`` micro-steps per dispatch) and
+    carries the before/after pair: ``multi_measured_s`` (whole window),
+    ``multi_measured_s_per_token``, and ``multi_speedup_per_token`` vs the
+    single-step reference dispatch — the numbers the decode_speed bench
+    JSON reports at workload granularity.
 
     Pallas-opacity: with ``interpret=False`` the attention kernel can lower
     to an opaque custom-call the HLO walker cannot cost; the record then
@@ -406,10 +415,38 @@ def roofline_decode_step(arch: str = "tinyllama-1.1b", batch: int = 4,
     rec["mfu_measured"] = rec["model_flops"] / (best * PEAK_FLOPS)
     rec.update(arch=arch, batch=B, page=page)
 
+    if steps > 1:
+        # §10 multi-step dispatch: the scan fn decode_batch_n compiles —
+        # rem keeps every lane live for the full window, rids key the
+        # on-device sampler
+        rem = jnp.full((B,), steps, jnp.int32)
+        rids = jnp.arange(1, B + 1, dtype=jnp.int32)
+        fn = be._decode_n_fn(steps)
+        compiled_n = fn.lower(be.params, be.pages, toks, pos, tabs, rem,
+                              rids).compile()
+        rec_n = analyze_compiled(compiled_n.as_text(), chips=1)
+        jax.block_until_ready(fn(be.params, be.pages, toks, pos, tabs,
+                                 rem, rids))
+        best_n = float("inf")
+        for _ in range(max(repeats, 1)):
+            t0 = _time.perf_counter()
+            jax.block_until_ready(fn(be.params, be.pages, toks, pos, tabs,
+                                     rem, rids))
+            best_n = min(best_n, _time.perf_counter() - t0)
+        rec["multi_steps"] = steps
+        rec["multi_hlo_flops_per_chip"] = rec_n["hlo_flops_per_chip"]
+        rec["multi_hlo_bytes_per_chip"] = rec_n["hlo_bytes_per_chip"]
+        rec["multi_measured_s"] = best_n
+        rec["multi_measured_s_per_token"] = best_n / steps
+        rec["multi_speedup_per_token"] = best * steps / best_n
+
     for key in ("hlo_flops_per_chip", "hlo_bytes_per_chip",
                 "coll_bytes_per_chip", "model_flops", "t_compute_s",
                 "t_memory_s", "t_collective_s", "roofline_s", "measured_s",
-                "mfu_bound", "mfu_measured"):
+                "mfu_bound", "mfu_measured", "multi_measured_s",
+                "multi_measured_s_per_token", "multi_speedup_per_token"):
+        if key not in rec:
+            continue
         obs.gauge(f"roofline_decode_{key}",
                   "paged decode-step roofline profile",
                   arch=arch, batch=str(B)).set(float(rec[key]))
@@ -428,6 +465,9 @@ def main(argv=None) -> int:
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--num-blocks", type=int, default=32)
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--steps", type=int, default=1,
+                    help="also profile the §10 multi-step scan dispatch "
+                    "at this horizon (before/after pair in the record)")
     ap.add_argument("--no-interpret", action="store_true",
                     help="compiled Pallas kernels (HLO may be opaque)")
     ap.add_argument("--metrics-out", default=None,
@@ -441,17 +481,22 @@ def main(argv=None) -> int:
     rec = roofline_decode_step(
         arch=args.arch, batch=args.batch, num_blocks=args.num_blocks,
         page=args.page, max_len=args.max_len, repeats=args.repeats,
-        interpret=not args.no_interpret, registry=registry)
+        interpret=not args.no_interpret, registry=registry,
+        steps=args.steps)
     print(f"== decode-step roofline: {args.arch} B={rec['batch']} "
           f"page={rec['page']}"
           + (" [HLO opaque: custom-call kernels]" if rec["hlo_opaque"]
              else ""))
-    for k in ("hlo_flops_per_chip", "hlo_bytes_per_chip", "model_flops",
-              "t_compute_s", "t_memory_s", "roofline_s", "measured_s",
-              "mfu_bound", "mfu_measured", "dominant"):
+    keys = ["hlo_flops_per_chip", "hlo_bytes_per_chip", "model_flops",
+            "t_compute_s", "t_memory_s", "roofline_s", "measured_s",
+            "mfu_bound", "mfu_measured", "dominant"]
+    if args.steps > 1:
+        keys += ["multi_steps", "multi_measured_s",
+                 "multi_measured_s_per_token", "multi_speedup_per_token"]
+    for k in keys:
         v = rec[k]
-        print(f"   {k:<22} {v:.4g}" if isinstance(v, float)
-              else f"   {k:<22} {v}")
+        print(f"   {k:<26} {v:.4g}" if isinstance(v, float)
+              else f"   {k:<26} {v}")
     if args.metrics_out:
         from repro.obs import dump_all
         paths = dump_all(args.metrics_out, registry=registry,

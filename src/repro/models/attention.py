@@ -209,7 +209,7 @@ def gqa_prefill_paged(x, p, cfg, pages, block_table, start, n, ctx=None):
 
 
 def gqa_decode_paged(x, p, cfg, pages, block_tables, positions, *,
-                     interpret=False, ctx=None):
+                     interpret=False, ctx=None, fused=False):
     """Batched one-token decode against paged KV via the Pallas kernel.
 
     x: (B, 1, D); block_tables: (B, n_max); positions: (B,) — the slot the
@@ -218,8 +218,12 @@ def gqa_decode_paged(x, p, cfg, pages, block_tables, positions, *,
     Under serving TP the kernel runs per-shard on the local KV-head slice
     of the pool (per-head online softmax is shard-local — no cross-shard
     reduction until wo, whose partial sums ``ctx.psum_attn`` all-reduces).
+    ``fused=True`` takes the single-dispatch append+attend kernel
+    (``fused_decode_attention``); the default two-dispatch path is kept as
+    the reference the fused kernel is parity-tested against.
     Returns (out (B, 1, D), new pages)."""
-    from repro.kernels.paged_attention import (paged_attention,
+    from repro.kernels.paged_attention import (fused_decode_attention,
+                                               paged_attention,
                                                paged_kv_append_batch)
     B, _, D = x.shape
     H, Dh = p["wq"].shape[1], p["wq"].shape[2]
@@ -230,11 +234,17 @@ def gqa_decode_paged(x, p, cfg, pages, block_tables, positions, *,
         cos, sin = rope_tables(positions[:, None], Dh, cfg.rope_theta)
         q = apply_rope(q, cos, sin)
         k = apply_rope(k, cos, sin)
-    kp, vp = paged_kv_append_batch(pages["k"], pages["v"], k[:, 0], v[:, 0],
-                                   block_tables, positions)
-    o = paged_attention(q[:, 0], kp, vp, block_tables,
-                        (positions + 1).astype(jnp.int32),
-                        scale=Dh ** -0.5, interpret=interpret)   # (B, H, Dh)
+    if fused:
+        o, kp, vp = fused_decode_attention(
+            q[:, 0], k[:, 0], v[:, 0], pages["k"], pages["v"],
+            block_tables, positions, scale=Dh ** -0.5, interpret=interpret)
+    else:
+        kp, vp = paged_kv_append_batch(pages["k"], pages["v"],
+                                       k[:, 0], v[:, 0],
+                                       block_tables, positions)
+        o = paged_attention(q[:, 0], kp, vp, block_tables,
+                            (positions + 1).astype(jnp.int32),
+                            scale=Dh ** -0.5, interpret=interpret)
     out = jnp.einsum("bhk,hkd->bd", o.astype(x.dtype), p["wo"])[:, None, :]
     if ctx is not None:
         out = ctx.psum_attn(out)

@@ -301,17 +301,20 @@ class Model:
         return new_pages
 
     def decode_paged(self, params, pages, tokens, positions, block_tables,
-                     *, interpret: bool = False):
+                     *, interpret: bool = False, fused: bool = False):
         """One batched decode step: tokens (B,1) i32 at per-sequence write
         positions (B,); block_tables (B, n_max).  Returns (logits (B, V),
-        new pages).  Under serving TP (ctx.tp_vocab_axis set) lm_head is
+        new pages).  ``fused=True`` routes attention through the
+        single-dispatch append+attend kernel (``fused_decode_attention``).
+        Under serving TP (ctx.tp_vocab_axis set) lm_head is
         vocab-column-sharded; the local logit slices are all-gathered —
         a pure concatenation, every column computed exactly as on one
         device — before the vocab-size slice."""
         x = self._embed(params, {"tokens": tokens}, "decode", index=0)
         x, new_pages = stack_apply_paged(x, params, self.cfg, self.ctx,
                                          "decode", pages, block_tables,
-                                         positions, interpret=interpret)
+                                         positions, interpret=interpret,
+                                         fused=fused)
         x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
         logits = jnp.einsum("bd,dv->bv", x[:, 0], params["lm_head"],
                             preferred_element_type=jnp.float32)

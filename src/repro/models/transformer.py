@@ -82,7 +82,7 @@ def stack_apply(x, params, cfg, ctx, mode, caches=None, index=None):
 # reads/writes a device-resident page pool addressed by block tables.
 # ---------------------------------------------------------------------------
 def layer_apply_paged(x, lp, mixer, ffn, cfg, ctx, mode, pages, tables, pos,
-                      n=None, interpret=False):
+                      n=None, interpret=False, fused=False):
     if mixer != "attn":
         raise ValueError(
             f"paged serving supports 'attn' mixers only, got {mixer!r}")
@@ -93,7 +93,7 @@ def layer_apply_paged(x, lp, mixer, ffn, cfg, ctx, mode, pages, tables, pos,
     else:
         mix_out, new_pages = gqa_decode_paged(h, lp, cfg, pages, tables,
                                               pos, interpret=interpret,
-                                              ctx=ctx)
+                                              ctx=ctx, fused=fused)
     x = ctx.hidden(x + mix_out)
     if ffn != "none":
         h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
@@ -103,7 +103,7 @@ def layer_apply_paged(x, lp, mixer, ffn, cfg, ctx, mode, pages, tables, pos,
 
 
 def stack_apply_paged(x, params, cfg, ctx, mode, pages, tables, pos, n=None,
-                      interpret=False):
+                      interpret=False, fused=False):
     """Paged analogue of ``stack_apply``.  mode "prefill": ``tables`` is one
     sequence's (n_max,) block table, ``pos`` the chunk's start offset, ``n``
     the real chunk length (rows past it are padding).  mode "decode":
@@ -113,7 +113,7 @@ def stack_apply_paged(x, params, cfg, ctx, mode, pages, tables, pos, n=None,
     for i, (mixer, ffn) in enumerate(cfg.prefix_pattern):
         x, np_ = layer_apply_paged(x, params["prefix"][f"l{i}"], mixer, ffn,
                                    cfg, ctx, mode, pages["prefix"][i],
-                                   tables, pos, n, interpret)
+                                   tables, pos, n, interpret, fused)
         new_prefix.append(np_)
 
     def body(carry, xs):
@@ -123,7 +123,8 @@ def stack_apply_paged(x, params, cfg, ctx, mode, pages, tables, pos, n=None,
         for i, (mixer, ffn) in enumerate(cfg.unit_pattern):
             key = f"l{i}"
             h, nc = layer_apply_paged(h, up[key], mixer, ffn, cfg, ctx, mode,
-                                      upages[key], tables, pos, n, interpret)
+                                      upages[key], tables, pos, n, interpret,
+                                      fused)
             new_u[key] = nc
         return h, new_u
 

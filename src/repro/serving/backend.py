@@ -19,6 +19,8 @@ backend can mirror block residency 1:1:
   begin_step()                      — start of ``_execute``; reset timers
   prefill_chunk(req, start, n, tb) — append prompt tokens [start, start+n)
   decode_batch(reqs, tables)        — one token for every listed request
+  decode_batch_n(reqs, tables, n)   — up to n tokens per request in ONE
+                                      dispatch (supports_multi_step only)
   kv_swap_out(rid, table, tokens)   — blocks about to be freed (host copy)
   kv_swap_in(rid, table)            — blocks reallocated; restore contents
   kv_copy_page(src, dst)            — COW fork: duplicate page src -> dst
@@ -65,6 +67,23 @@ class Backend:
 
     def decode_batch(self, reqs: List, tables: List[List[int]]) -> None:
         pass
+
+    # multi-step decode (DESIGN.md §10): backends that can run n decode
+    # micro-steps inside ONE dispatch advertise supports_multi_step and
+    # implement decode_batch_n; the engine's fast path only engages when
+    # the flag is set, so simulated backends keep exact single-step
+    # semantics (and unchanged baselines) without any fallback looping
+    supports_multi_step: bool = False
+
+    def decode_batch_n(self, reqs: List, tables: List[List[int]],
+                       n: int):
+        """Run up to ``n`` decode micro-steps for every listed request in
+        one dispatch.  Returns (tokens (B, n) int32, active (B, n) bool):
+        ``active[i, s]`` marks micro-step ``s`` as real for lane ``i`` —
+        lanes retire (stop decoding, route KV writes to the scrap page)
+        once their remaining output is exhausted, so ``tokens[i, s]`` is
+        meaningful only where active."""
+        raise NotImplementedError
 
     def kv_swap_out(self, rid: int, block_table: List[int],
                     tokens: int) -> None:
@@ -117,6 +136,38 @@ class Sampler:
             (self.seed, rid & 0x7FFFFFFF, pos & 0x7FFFFFFF))
         g = rng.gumbel(size=z.shape)
         return int(np.argmax(z + g))
+
+    def sample_device(self, logits, rids, poss):
+        """jit-compatible batched sampling on device (DESIGN.md §10).
+
+        logits (B, V) f32; rids/poss (B,) i32.  Greedy argmax is
+        bit-identical to the host path at temperature 0 (same f32 logits,
+        same first-max tie-break).  temperature > 0 draws a Gumbel
+        perturbation from a key folded per (seed, rid, pos) — like the
+        host path the stream depends only on (seed, rid, pos), never on
+        batch composition or dispatch grouping, but the generator differs
+        (threefry vs numpy PCG64), so temp>0 streams changed once,
+        deterministically, when sampling moved on device."""
+        import jax
+        import jax.numpy as jnp
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        z = logits.astype(jnp.float32) / self.temperature
+        V = z.shape[-1]
+        if self.top_k > 0 and self.top_k < V:
+            kth = jax.lax.top_k(z, self.top_k)[0][..., -1:]
+            z = jnp.where(z >= kth, z, -jnp.inf)
+        base = jax.random.PRNGKey(self.seed)
+
+        def g_row(rid, pos):
+            key = jax.random.fold_in(
+                jax.random.fold_in(base, rid & 0x7FFFFFFF),
+                pos & 0x7FFFFFFF)
+            return jax.random.gumbel(key, (V,), jnp.float32)
+
+        g = jax.vmap(g_row)(rids.astype(jnp.uint32),
+                            poss.astype(jnp.uint32))
+        return jnp.argmax(z + g, axis=-1).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------

@@ -54,6 +54,13 @@ class EngineConfig:
     # without meta['prompt_tokens'] have no prefix identity and bypass the
     # cache entirely, so legacy workloads are bit-for-bit unchanged.
     prefix_cache: bool = True
+    # multi-step decode dispatch ceiling (DESIGN.md §10): on stable
+    # decode-only steps the engine may run up to this many micro-steps in
+    # ONE backend dispatch (further capped by the scheduler's horizon, the
+    # next arrival, per-request remaining output, and KV headroom).  1 =
+    # classic per-token dispatch; backends without supports_multi_step
+    # ignore it.  Token streams are byte-identical across settings.
+    decode_steps: int = 1
 
 
 class ServeEngine:
@@ -127,6 +134,9 @@ class ServeEngine:
         self.cost_residuals: List[float] = []
         self._pending: List[Tuple[float, int, object]] = []
         self._seq = 0
+        # last engine step's duration — the fast path's estimate of how
+        # many micro-steps fit before the next pending arrival
+        self._last_step_dt = 0.0
 
     def _init_instruments(self) -> None:
         """Resolve every hot-path instrument ONCE.  Under the no-op
@@ -602,10 +612,22 @@ class ServeEngine:
         if not prefill_tokens and not decode_ctxs and self._kv_blocked:
             self._force_evict()
 
+        n = self._decode_horizon(dec, decoded_reqs, prefill_tokens, protect)
+        if n > 1:
+            # the horizon pre-allocated n tokens of block headroom per
+            # lane, which may have grown the tables — re-read them
+            decode_tables = [self.kv.block_table(r.rid)
+                             for r in decoded_reqs]
+            _, act_n = self.backend.decode_batch_n(decoded_reqs,
+                                                   decode_tables, n)
+            self._account_multi_step(decoded_reqs, decode_ctxs, act_n, n)
+            return
+
         self.backend.decode_batch(decoded_reqs, decode_tables)
 
         dt = self.backend.step_time(prefill_tokens, decode_ctxs)
         dt += self._step_swap / self.cfg.swap_bw
+        self._last_step_dt = dt
         self.now += dt
         self.step += 1
         ctx_total = sum(decode_ctxs)
@@ -661,6 +683,118 @@ class ServeEngine:
                 if self._trace:
                     self.tracer.event("finish", r.rid, self.now,
                                       self.replica, decoded=r.decoded)
+        for r in finished_now:
+            self.sched.on_finish(r, self._view())
+            if r.dag_id is not None:
+                self._maybe_advance_dag(r)
+
+    # ------------------------------------------------------------------
+    # multi-step decode fast path (DESIGN.md §10)
+    # ------------------------------------------------------------------
+    def _decode_horizon(self, dec, decoded_reqs, prefill_tokens,
+                        protect) -> int:
+        """How many decode micro-steps may safely run in one dispatch.
+
+        Engages only on STABLE decode-only steps: no prefill, preemption,
+        shedding, or KV pressure this step, and every live request is in
+        the decode batch — a waiting, paced, or JIT-deferred request means
+        the scheduler wants to revisit its decision next step, so the fast
+        path stands down.  The horizon is then the minimum of the
+        configured ceiling, the scheduler's own horizon (e.g. the next
+        quanta boundary), the steps left before max_steps, the smallest
+        remaining output (a finish re-opens a batch slot), and the steps
+        estimated to fit before the next pending arrival; finally the
+        whole window's KV is pre-allocated so no block allocation can be
+        needed mid-scan."""
+        n_cfg = self.cfg.decode_steps
+        if (n_cfg <= 1 or not decoded_reqs
+                or not getattr(self.backend, "supports_multi_step", False)):
+            return 1
+        if (prefill_tokens or dec.prefill or dec.preempted
+                or getattr(dec, "shed", ()) or self._kv_blocked):
+            return 1
+        in_batch = {r.rid for r in decoded_reqs}
+        for r in self.requests.values():
+            if r.state != ReqState.FINISHED and r.rid not in in_batch:
+                return 1
+        n = min(n_cfg, int(self.sched.decode_horizon(self._view())),
+                self.cfg.max_steps - self.step,
+                min(r.true_output_len - r.decoded for r in decoded_reqs))
+        if self._pending:
+            gap = self._pending[0][0] - self.now
+            est = self._last_step_dt
+            if gap <= 0 or est <= 0:
+                return 1
+            n = min(n, max(1, int(gap / est)))
+        if n <= 1:
+            return 1
+        for r in decoded_reqs:
+            if not self._ensure_kv(r.rid, r.prompt_len + r.decoded + n,
+                                   protect):
+                return 1
+        return n
+
+    def _account_multi_step(self, decoded_reqs, decode_ctxs, act_n,
+                            n: int) -> None:
+        """SLO accounting for one n-micro-step dispatch: the window's wall
+        time is split evenly across micro-steps and every per-step artifact
+        (clock, step_log, phase/width histograms, tracker observations,
+        token_times, TTFT/TPOT, finish processing) is emitted per
+        micro-step exactly as the single-step path would — only the
+        dispatch count changed."""
+        dt_total = self.backend.step_time(0, decode_ctxs)
+        dt_total += self._step_swap / self.cfg.swap_bw
+        dt_each = dt_total / n
+        self._last_step_dt = dt_each
+        tr = self._tracker()
+        cm = getattr(tr, "cost_model", None) if tr is not None else None
+        finished_now = []
+        for s in range(n):
+            act = [r for i, r in enumerate(decoded_reqs) if act_n[i][s]]
+            if not act:
+                break
+            ctx_total = sum(r.prompt_len + r.decoded for r in act)
+            self.now += dt_each
+            self.step += 1
+            self.step_log.append((self.now, 0, len(act), ctx_total))
+            self._m_step["decode"].observe(dt_each, t=self.now)
+            self._m_prefill_tok.observe(0, t=self.now)
+            self._m_decode_seqs.observe(len(act), t=self.now)
+            self._m_kv.set(1.0 - self.kv.available_frac, t=self.now)
+            if tr is not None:
+                pred = cm.predict(0, len(act), float(ctx_total)) \
+                    if cm is not None else None
+                if pred is not None:
+                    self.cost_residuals.append(dt_each - pred)
+                    self._m_resid.observe(abs(dt_each - pred), t=self.now)
+                tr.on_step(dt_each, 0, len(act), float(ctx_total))
+            for r in act:
+                r.decoded += 1
+                r.token_times.append(self.now)
+                if r.first_token_t is None:
+                    r.first_token_t = self.now
+                    self._m_ttft[r.slo.kind].observe(self.now - r.arrival,
+                                                     t=self.now)
+                    if self._trace:
+                        self.tracer.event("first_token", r.rid, self.now,
+                                          self.replica)
+                if r.done:
+                    r.state = ReqState.FINISHED
+                    r.finish_t = self.now
+                    if self.cfg.prefix_cache:
+                        self._prefix_register(r)
+                    self.kv.release(r.rid)
+                    self.backend.kv_release(r.rid)
+                    self.finished.append(r)
+                    finished_now.append(r)
+                    self._m_finished.inc(t=self.now)
+                    if r.decoded > 1 and r.first_token_t is not None:
+                        self._m_tpot[r.slo.kind].observe(
+                            (self.now - r.first_token_t) / (r.decoded - 1),
+                            t=self.now)
+                    if self._trace:
+                        self.tracer.event("finish", r.rid, self.now,
+                                          self.replica, decoded=r.decoded)
         for r in finished_now:
             self.sched.on_finish(r, self._view())
             if r.dag_id is not None:

@@ -25,6 +25,20 @@ Sampling is seeded temperature/top-k keyed per (rid, position) — token
 streams are reproducible under a fixed seed regardless of batch
 composition (greedy argmax at temperature 0).
 
+Raw-speed decode pass (DESIGN.md §10): sampling runs ON DEVICE
+(``Sampler.sample_device``), attention takes the fused append+attend
+kernel (``fused_decode_attention``, one dispatch instead of two), and
+``decode_batch_n`` runs up to n decode micro-steps inside one
+``jax.lax.scan`` dispatch — the sampled token feeds back as the next
+input, positions increment on device, finished lanes retire to the scrap
+page via per-lane remaining-token masks, and the host syncs once per n
+tokens.  ``decode_batch`` is ``decode_batch_n(n=1)``, so single- and
+multi-step dispatch share one compiled body and token streams are
+byte-identical across horizons at temperature 0.  Prefill chunks are
+queued per step and flushed as batched dispatches (same-bucket chunks
+share one ``lax.scan`` dispatch); the one host sync per step lives in
+``step_time``.
+
 Tensor parallelism (DESIGN.md §8): ``tp > 1`` executes every step under a
 ``shard_map`` over a 1-D ``('model',)`` mesh of ``tp`` devices.  Resident
 weights shard Megatron-style per ``launch.sharding.paged_param_specs``
@@ -65,11 +79,14 @@ def _bucket(n: int, lo: int = 8) -> int:
 
 
 class PagedJaxBackend(Backend):
+    supports_multi_step = True
+
     def __init__(self, arch: str = "tinyllama-1.1b", num_blocks: int = 64,
                  page: int = 16, max_len: int = 128, seed: int = 0,
                  temperature: float = 0.0, top_k: int = 0,
                  overhead: float = 1e-4, interpret: bool = True,
-                 tp: int = 1, devices: Optional[Sequence] = None):
+                 tp: int = 1, devices: Optional[Sequence] = None,
+                 fused: bool = True):
         self.cfg = reduced_config(arch)
         self.tp = max(int(tp), 1)
         self.plan = paged_tp_plan(self.cfg, self.tp)
@@ -104,11 +121,24 @@ class PagedJaxBackend(Backend):
         self.pages = self.model.init_paged_caches(pool + 1, page)
         self.overhead = overhead
         self.interpret = interpret
+        self.fused = bool(fused)
         self.sampler = Sampler(temperature=temperature, top_k=top_k,
                                seed=seed)
         self.generated: Dict[int, List[int]] = {}
         self._prompts: Dict[int, np.ndarray] = {}
         self._host: Dict[int, object] = {}       # swapped-out page contents
+        # queued prefill chunks for the current step; flushed as batched
+        # dispatches before anything reads the pages (decode / swap / sync)
+        self._pf_queue: List[tuple] = []
+        # per-rid padded block tables (rebuilt only when the table changes)
+        self._tab_cache: Dict[int, tuple] = {}
+        # preallocated decode staging buffers per batch bucket
+        self._staging: Dict[int, tuple] = {}
+        self._decode_n_cache: Dict[int, object] = {}
+        # dispatch accounting (decode_speed bench: dispatches per token)
+        self.n_decode_dispatches = 0
+        self.n_decode_tokens = 0
+        self.n_prefill_dispatches = 0
         self._seed = seed
         self._t_acc = 0.0
         self._host_t0 = 0.0
@@ -120,6 +150,9 @@ class PagedJaxBackend(Backend):
         self._page_shardings = None
         if self.mesh is None:
             self._prefill = jax.jit(self.model.prefill_paged)
+            self._prefill_many = jax.jit(self._prefill_many_impl)
+            # two-dispatch single-step reference (append + attend kernels
+            # separately, host sampling) — kept for parity tests/roofline
             self._decode = jax.jit(functools.partial(
                 self.model.decode_paged, interpret=interpret))
         else:
@@ -163,6 +196,7 @@ class PagedJaxBackend(Backend):
         from jax.experimental.shard_map import shard_map
         pspecs = paged_param_specs(self.cfg, self.tp, self.params)
         gspecs = paged_page_specs(self.cfg, self.tp, self.pages)
+        self._pspecs, self._gspecs = pspecs, gspecs
         sh = lambda tree: jax.tree.map(
             lambda s: NamedSharding(self.mesh, s), tree,
             is_leaf=lambda x: isinstance(x, P))
@@ -172,6 +206,10 @@ class PagedJaxBackend(Backend):
         self.pages = jax.device_put(self.pages, self._page_shardings)
         self._prefill = jax.jit(shard_map(
             self.model.prefill_paged, mesh=self.mesh,
+            in_specs=(pspecs, gspecs, P(), P(), P(), P()),
+            out_specs=gspecs, check_rep=False))
+        self._prefill_many = jax.jit(shard_map(
+            self._prefill_many_impl, mesh=self.mesh,
             in_specs=(pspecs, gspecs, P(), P(), P(), P()),
             out_specs=gspecs, check_rep=False))
         self._decode = jax.jit(shard_map(
@@ -187,6 +225,86 @@ class PagedJaxBackend(Backend):
         already preserved the placement."""
         if self._page_shardings is not None:
             self.pages = jax.device_put(self.pages, self._page_shardings)
+
+    # ------------------------------------------------------------------
+    # fused multi-step decode (DESIGN.md §10)
+    # ------------------------------------------------------------------
+    def _scan_decode(self, params, pages, toks, pos, tabs, rem, rids, *,
+                     n: int):
+        """n decode micro-steps in ONE dispatch via ``lax.scan``.
+
+        Carry: (pages, input tokens, write positions, remaining budget).
+        Each micro-step masks retired lanes (rem == 0) onto the scrap page,
+        runs the fused append+attend decode, samples on device keyed per
+        (seed, rid, pos), feeds the token back as the next input, and
+        increments positions for active lanes only.  The scan body compiles
+        once per (B, n) bucket and is iterated — not unrolled — so every
+        micro-step runs bit-identical numerics regardless of n; that is
+        what makes single- and multi-step token streams byte-equal."""
+        scrap_row = jnp.full((1, self.n_max), self.scrap, jnp.int32)
+
+        def micro(carry, _):
+            pages, toks, pos, rem = carry
+            active = rem > 0
+            tabs_eff = jnp.where(active[:, None], tabs, scrap_row)
+            logits, pages = self.model.decode_paged(
+                params, pages, toks, pos, tabs_eff,
+                interpret=self.interpret, fused=self.fused)
+            nxt = self.sampler.sample_device(logits, rids, pos)
+            toks = jnp.where(active, nxt, toks[:, 0])[:, None]
+            pos = pos + active.astype(pos.dtype)
+            rem = rem - active.astype(rem.dtype)
+            return (pages, toks, pos, rem), (nxt, active)
+
+        (pages, _, _, _), (tok_n, act_n) = jax.lax.scan(
+            micro, (pages, toks, pos, rem), None, length=n)
+        return tok_n.T, act_n.T, pages          # (B, n) each
+
+    def _decode_n_fn(self, n: int):
+        """Jitted (and, under tp, shard_mapped) scan dispatch for a given
+        static horizon n — cached per n; shape buckets retrace inside."""
+        fn = self._decode_n_cache.get(n)
+        if fn is None:
+            body = functools.partial(self._scan_decode, n=n)
+            if self.mesh is None:
+                fn = jax.jit(body)
+            else:
+                from jax.experimental.shard_map import shard_map
+                fn = jax.jit(shard_map(
+                    body, mesh=self.mesh,
+                    in_specs=(self._pspecs, self._gspecs,
+                              P(), P(), P(), P(), P()),
+                    out_specs=(P(), P(), self._gspecs), check_rep=False))
+            self._decode_n_cache[n] = fn
+        return fn
+
+    def _prefill_many_impl(self, params, pages, toks, starts, tabs, ns):
+        """Scan a batch of same-bucket prefill chunks through one dispatch.
+        Chunks in a step target distinct requests (disjoint pages), so
+        lane order is irrelevant; padded lanes carry n=0 + all-scrap
+        tables, and their discarded activations never touch the pool."""
+        def body(pages, xs):
+            t, s, tab, n = xs
+            return self.model.prefill_paged(params, pages, t, s, tab, n), None
+
+        pages, _ = jax.lax.scan(body, pages, (toks, starts, tabs, ns))
+        return pages
+
+    def _track_shape(self, key) -> None:
+        if key not in self._shapes:
+            self._shapes.add(key)
+            self._m_compile.inc()
+
+    def _staging_bufs(self, B: int):
+        bufs = self._staging.get(B)
+        if bufs is None:
+            bufs = (np.zeros((B, 1), np.int32),          # input tokens
+                    np.zeros(B, np.int32),               # write positions
+                    np.full((B, self.n_max), self.scrap, np.int32),
+                    np.zeros(B, np.int32),               # remaining budget
+                    np.zeros(B, np.int32))               # rids (sampling key)
+            self._staging[B] = bufs
+        return bufs
 
     # ------------------------------------------------------------------
     def prompt_ids(self, req) -> np.ndarray:
@@ -213,9 +331,17 @@ class PagedJaxBackend(Backend):
             self._prompts[req.rid] = toks
         return toks
 
-    def _padded_table(self, table: List[int]) -> np.ndarray:
+    def _padded_table(self, rid: int, table: List[int]) -> np.ndarray:
+        """Padded (n_max,) device block table for rid, cached until the
+        table's contents change (append/COW fork/swap move the request to
+        different pages — caught by list comparison, not by hooks)."""
+        tl = list(table)
+        ent = self._tab_cache.get(rid)
+        if ent is not None and ent[0] == tl:
+            return ent[1]
         t = np.full(self.n_max, self.scrap, np.int32)
-        t[:len(table)] = table
+        t[:len(tl)] = tl
+        self._tab_cache[rid] = (tl, t)
         return t
 
     # ------------------------------------------------------------------
@@ -235,20 +361,53 @@ class PagedJaxBackend(Backend):
                 "workload (WorkloadSpec.prompt_cap/output_cap)")
         prompt = self.prompt_ids(req)
         C = _bucket(n)
-        if ("prefill", C) not in self._shapes:
-            self._shapes.add(("prefill", C))
-            self._m_compile.inc()
         self._pages_step += len(block_table)
         toks = np.zeros(C, np.int32)
         toks[:n] = prompt[start:start + n]
-        t0 = time.perf_counter()
-        self.pages = self._prefill(
-            self.params, self.pages, jnp.asarray(toks)[None, :],
-            jnp.int32(start), jnp.asarray(self._padded_table(block_table)),
-            jnp.int32(n))
-        jax.tree.leaves(self.pages)[0].block_until_ready()
-        self._t_acc += time.perf_counter() - t0
+        # queue only — same-step chunks batch into one dispatch, and the
+        # step's single host sync happens in step_time, not per chunk
+        self._pf_queue.append(
+            (C, toks, start, self._padded_table(req.rid, block_table), n))
         self.generated.setdefault(req.rid, [])
+
+    def _flush_prefill(self) -> None:
+        """Dispatch all queued prefill chunks.  Chunks sharing a bucket C
+        go through one ``_prefill_many`` scan (lane count padded to its
+        own bucket); singletons keep the original single-chunk dispatch.
+        No sync here — the device pipeline drains in step_time."""
+        q = self._pf_queue
+        if not q:
+            return
+        self._pf_queue = []
+        groups: Dict[int, list] = {}
+        for item in q:
+            groups.setdefault(item[0], []).append(item)
+        t0 = time.perf_counter()
+        for C, items in groups.items():
+            self.n_prefill_dispatches += 1
+            if len(items) == 1:
+                _, toks, start, tab, n = items[0]
+                self._track_shape(("prefill", C))
+                self.pages = self._prefill(
+                    self.params, self.pages, jnp.asarray(toks)[None, :],
+                    jnp.int32(start), jnp.asarray(tab), jnp.int32(n))
+            else:
+                L = _bucket(len(items), lo=2)
+                self._track_shape(("prefill_many", C, L))
+                toksL = np.zeros((L, 1, C), np.int32)
+                starts = np.zeros(L, np.int32)
+                tabsL = np.full((L, self.n_max), self.scrap, np.int32)
+                ns = np.zeros(L, np.int32)
+                for i, (_, toks, start, tab, n) in enumerate(items):
+                    toksL[i, 0] = toks
+                    starts[i] = start
+                    tabsL[i] = tab
+                    ns[i] = n
+                self.pages = self._prefill_many(
+                    self.params, self.pages, jnp.asarray(toksL),
+                    jnp.asarray(starts), jnp.asarray(tabsL),
+                    jnp.asarray(ns))
+        self._t_acc += time.perf_counter() - t0
 
     def decode_batch(self, reqs: List, tables: List[List[int]]) -> None:
         """One real decode step for every request in the batch.
@@ -257,32 +416,54 @@ class PagedJaxBackend(Backend):
         tail for the first step), written at position prompt_len-1+decoded;
         re-writing the prompt tail's KV on the first step is idempotent, so
         prefill needs no logits head and every emitted token flows through
-        this one path."""
+        this one path.  Delegates to ``decode_batch_n(n=1)`` — single- and
+        multi-step dispatch share one compiled scan body, so streams are
+        byte-identical across horizons."""
         if not reqs:
             return
-        B = _bucket(len(reqs), lo=1)
-        if ("decode", B) not in self._shapes:
-            self._shapes.add(("decode", B))
-            self._m_compile.inc()
-        self._pages_step += sum(len(t) for t in tables)
-        toks = np.zeros((B, 1), np.int32)
-        pos = np.zeros(B, np.int32)
-        tabs = np.full((B, self.n_max), self.scrap, np.int32)
+        self.decode_batch_n(reqs, tables, 1)
+
+    def decode_batch_n(self, reqs: List, tables: List[List[int]], n: int):
+        """Up to n decode micro-steps per request in ONE device dispatch
+        (DESIGN.md §10).  Lanes retire to the scrap page when their true
+        remaining output runs out mid-scan; the host syncs once for the
+        whole window.  Returns (tokens (B, n) i32, active (B, n) bool)."""
+        if not reqs:
+            return (np.zeros((0, n), np.int32), np.zeros((0, n), bool))
+        self._flush_prefill()
+        nr = len(reqs)
+        B = _bucket(nr, lo=1)
+        self._track_shape(("decode", B, n))
+        self._pages_step += sum(len(t) for t in tables) * n
+        toks, pos, tabs, rem, rids = self._staging_bufs(B)
+        toks[nr:] = 0
+        pos[nr:] = 0
+        tabs[nr:] = self.scrap
+        rem[nr:] = 0
+        rids[nr:] = 0
         for i, r in enumerate(reqs):
             gen = self.generated.setdefault(r.rid, [])
             prompt = self.prompt_ids(r)
             toks[i, 0] = gen[-1] if gen else prompt[-1]
             pos[i] = r.prompt_len - 1 + r.decoded
-            tabs[i] = self._padded_table(tables[i])
+            tabs[i] = self._padded_table(r.rid, tables[i])
+            rem[i] = max(0, min(n, r.true_output_len - r.decoded))
+            rids[i] = r.rid & 0x7FFFFFFF
         t0 = time.perf_counter()
-        logits, self.pages = self._decode(
+        tok_n, act_n, self.pages = self._decode_n_fn(n)(
             self.params, self.pages, jnp.asarray(toks), jnp.asarray(pos),
-            jnp.asarray(tabs))
-        logits = np.asarray(logits)
+            jnp.asarray(tabs), jnp.asarray(rem), jnp.asarray(rids))
+        tok_n = np.asarray(tok_n)           # ONE host sync per n tokens
+        act_n = np.asarray(act_n)
         self._t_acc += time.perf_counter() - t0
+        self.n_decode_dispatches += 1
+        self.n_decode_tokens += int(act_n[:nr].sum())
         for i, r in enumerate(reqs):
-            tok = self.sampler.sample(logits[i], r.rid, int(pos[i]))
-            self.generated[r.rid].append(tok)
+            gen = self.generated[r.rid]
+            for s in range(n):
+                if act_n[i, s]:
+                    gen.append(int(tok_n[i, s]))
+        return tok_n[:nr], act_n[:nr]
 
     # -- KV residency hooks (mirror BlockManager transitions 1:1) -------
     def _gather(self, leaf, table):
@@ -296,8 +477,10 @@ class PagedJaxBackend(Backend):
 
     def kv_swap_out(self, rid: int, block_table: List[int],
                     tokens: int) -> None:
+        self._tab_cache.pop(rid, None)
         if not block_table:
             return
+        self._flush_prefill()     # the gather must see this step's writes
         table = np.asarray(block_table, np.int32)
         self._host[rid] = jax.tree.map(
             lambda p: np.asarray(self._gather(p, table)), self.pages)
@@ -315,6 +498,7 @@ class PagedJaxBackend(Backend):
         """COW fork: duplicate device page src into dst (the engine is
         about to append into a previously shared page).  Byte-exact copy,
         so forked continuations equal their cache-off counterparts."""
+        self._flush_prefill()     # src must hold this step's writes
         self.pages = jax.tree.map(
             lambda p: (p.at[:, dst].set(p[:, src]) if p.ndim == 5
                        else p.at[dst].set(p[src])), self.pages)
@@ -323,6 +507,7 @@ class PagedJaxBackend(Backend):
     def kv_release(self, rid: int) -> None:
         self._host.pop(rid, None)
         self._prompts.pop(rid, None)
+        self._tab_cache.pop(rid, None)
 
     def output_tokens(self, rid: int) -> Optional[List[int]]:
         """Real generated tokens — the engine registers prompt+output
@@ -333,6 +518,12 @@ class PagedJaxBackend(Backend):
     # ------------------------------------------------------------------
     def step_time(self, prefill_tokens: int,
                   decode_ctxs: List[int]) -> float:
+        self._flush_prefill()
+        # the step's one host sync: drain every dispatch queued above so
+        # _t_acc is honest device time (credited as device seconds)
+        t0 = time.perf_counter()
+        jax.tree.leaves(self.pages)[0].block_until_ready()
+        self._t_acc += time.perf_counter() - t0
         if self.obs.enabled:
             # host share = wall since begin_step minus accumulated device
             # time; real wall-clock values, metrics-only (never fed back

@@ -84,6 +84,9 @@ class Summary:
                     goodput_rps=round(self.goodput_rps, 3),
                     goodput_frac=round(self.goodput_frac, 4),
                     tok_s=round(self.throughput_tok_s, 1),
+                    # duplicate under the canonical name the decode-speed
+                    # bench reports; tok_s stays for baseline-file compat
+                    tok_per_s=round(self.throughput_tok_s, 1),
                     makespan=round(self.makespan, 1),
                     cached_frac=round(self.cached_frac, 4),
                     prefix_hit_rate=round(self.prefix_hit_rate, 4),

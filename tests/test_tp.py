@@ -121,6 +121,30 @@ def test_tp2_streams_identical_seeded_temperature():
 
 
 @need2
+def test_tp2_multi_step_decode_streams_identical():
+    """Multi-step dispatch under tensor parallelism: the lax.scan decode
+    window runs INSIDE the shard_map, so n>1 must reproduce the tp=1
+    single-step streams byte-for-byte (DESIGN.md §10)."""
+    def run(tp, decode_steps):
+        be = PagedJaxBackend(num_blocks=16, page=16, max_len=64, seed=0,
+                             tp=tp)
+        eng = ServeEngine(be, make_scheduler("tempo", use_predictor=False),
+                          EngineConfig(max_batch=2, prefill_budget=16,
+                                       tp=tp, decode_steps=decode_steps))
+        eng.load(_mk_reqs(n=2), [])
+        fin = eng.run()
+        assert len(fin) == 2
+        if decode_steps > 1:
+            assert any(k[0] == "decode" and k[2] > 1 for k in be._shapes), \
+                "fast path never engaged"
+        return {r.rid: list(be.generated[r.rid]) for r in fin}
+
+    ref = run(tp=1, decode_steps=1)
+    assert run(tp=2, decode_steps=4) == ref
+    assert run(tp=1, decode_steps=4) == ref
+
+
+@need2
 def test_tp2_swap_roundtrip_byte_exact():
     """Evictions on the SHARDED pool (tp=2, 2 per-device blocks -> 4
     aggregate) must restore KV byte-exactly: streams equal the
