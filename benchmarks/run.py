@@ -80,12 +80,14 @@ def main() -> None:
     from benchmarks.gmg import ALL as GMG
     from benchmarks.paper_figs import ALL
     from benchmarks.prefix_reuse import ALL as PREFIX
+    from benchmarks.spec_decode import ALL as SPEC
 
     benches = dict(ALL)
     benches.update(CLUSTER)
     benches.update(PREFIX)
     benches.update(GMG)
     benches.update(DECODE_SPEED)
+    benches.update(SPEC)
     benches["kernels"] = lambda quick=True: _kernel_bench()
     names = [n for n in benches if (not args.only or args.only in n)]
     baselines = {}
@@ -136,6 +138,9 @@ def main() -> None:
         if "decode_speed" in fresh:
             from benchmarks.decode_speed import check as ds_check
             code = ds_check(fresh["decode_speed"]) or code
+        if "spec_decode" in fresh:
+            from benchmarks.spec_decode import check as spec_check
+            code = spec_check(fresh["spec_decode"]) or code
         sys.exit(code)
 
 

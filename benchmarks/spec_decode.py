@@ -1,0 +1,232 @@
+"""Speculative-decode benchmark: goodput / tok/s / accept rate, spec-on
+vs spec-off, on the sim and jax backends across chat and agentic
+workloads (DESIGN.md §11).
+
+Two economics regimes, two kinds of gate:
+
+* **sim** — the roofline step-time model is memory-bound at decode, so a
+  verified window of W tokens genuinely costs ~one step.  Fully
+  deterministic (Bernoulli accept model keyed off the run seed), so the
+  gate is strict: spec-on goodput >= spec-off on both workloads.
+* **jax** — the CPU-interpret substrate is compute-bound (a W-token
+  verify window chains W full forwards), so speculation's win here is
+  *dispatch economics*: fewer engine steps per emitted token.  The
+  backend is built with a realistic per-step dispatch ``overhead``
+  (identical in both arms — same hardware) so that fewer-steps shows up
+  in the engine clock.  Timings ride host wall-clock, so the goodput
+  gate carries a small tolerance and a tok/s floor; the *hard* gate is
+  byte-identity — spec-on token streams must equal spec-off exactly
+  (greedy sampling, per-(seed,rid,pos) keys make this deterministic).
+
+Scheduler choice is part of the experiment (README "Speculative
+decoding" note): the jax chat arm uses FCFS ("vllm") because queue-drain
+TTFT improvements are monotone per request; pacing schedulers (tempo,
+gmg) can *spend* the slack speculation creates.  The sim arms run tempo
+with gmg's SPEC_DEPTH-style static depth; the jax agentic arm runs gmg
+so the margin-driven depth policy gets bench coverage.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import statistics
+import time
+from typing import List, Optional
+
+from benchmarks.common import save
+from repro.core.baselines import make_scheduler
+from repro.core.service import ServiceModel
+from repro.serving.engine import EngineConfig, ServeEngine
+from repro.serving.metrics import summarize
+from repro.serving.run import run_experiment
+from repro.serving.workload import WorkloadGen, WorkloadSpec
+
+# jax chat arm: FCFS burst sized so the queue drains through a paged
+# pool of 192×16-token blocks; depth 6 with the nmin=2 drafter holds
+# accept ~0.75 on these streams
+_JAX_CHAT = dict(rate=40.0, duration=1.0, seed=5, mix=(1, 0, 0),
+                 best_effort_frac=0.0, prompt_cap=16, output_cap=64,
+                 slo_scale=1.6)
+# jax agentic arm: multi-turn DAGs with a shared system prompt, capped
+# so accumulated context fits max_len=128
+_JAX_AGENTIC = dict(scenario="agentic", rate=3.0, duration=2.0, seed=5,
+                    turns=(2, 3), prompt_cap=12, output_cap=12,
+                    system_prompt_len=8, shared_system_frac=0.5,
+                    slo_scale=1.6)
+_SIM_CHAT = dict(rate=30.0, duration=20.0, seed=5, mix=(1, 0, 0),
+                 best_effort_frac=0.0, slo_scale=0.5)
+_SIM_AGENTIC = dict(scenario="agentic", rate=3.0, duration=30.0, seed=5,
+                    slo_scale=0.5, system_prompt_len=128,
+                    shared_system_frac=0.5)
+
+# jax goodput gate tolerances: scheduling acts on measured wall-clock
+# step times, so run-to-run jitter moves which SLOs are met; token
+# CONTENT is exact (gated at zero tolerance via stream digests)
+_JAX_GF_TOL = 0.05
+_JAX_TOKS_FLOOR = 0.9
+
+
+def _digest(backend) -> str:
+    return hashlib.sha256(
+        repr(sorted((r, tuple(t)) for r, t in backend.generated.items()))
+        .encode()).hexdigest()[:16]
+
+
+def _jax_arm(wl: WorkloadSpec, scheduler: str, depth: int, reps: int,
+             tp: int = 1) -> dict:
+    """One jax (workload, depth) cell: untimed warmup pass to take XLA
+    compiles out of the engine clock, then ``reps`` timed passes on the
+    same backend instance; scalar metrics are per-rep medians and the
+    stream digest must be constant across reps."""
+    from repro.serving.jax_backend import PagedJaxBackend
+    be = PagedJaxBackend(arch="tinyllama-1.1b", num_blocks=192, page=16,
+                         max_len=128, seed=0, overhead=1.5e-3, tp=tp)
+    cfg = EngineConfig(spec_depth_max=depth, max_batch=2,
+                       prefill_budget=32, tp=tp)
+    svc = ServiceModel()
+    sums, digs = [], []
+    for it in range(1 + reps):
+        if it:
+            be.reset_run_state()
+        sched = make_scheduler(scheduler,
+                               **({"service": svc}
+                                  if scheduler.startswith("gmg") else {}))
+        gen = WorkloadGen(wl)
+        singles, dags = gen.generate()
+        eng = ServeEngine(be, sched, cfg, workload=gen)
+        eng.load(singles, dags)
+        fin = eng.run()
+        if it:          # pass 0 is the compile warmup, never reported
+            sums.append(summarize(scheduler, fin, svc, eng.now,
+                                  n_admitted=eng.submitted_count,
+                                  shed=eng.shed,
+                                  spec_proposed=eng.spec_proposed,
+                                  spec_accepted=eng.spec_accepted))
+            digs.append(_digest(be))
+    assert len(set(digs)) == 1, f"nondeterministic streams: {digs}"
+
+    def med(get):
+        return statistics.median(get(s) for s in sums)
+    lat = [s.per_type.get("latency", {}) for s in sums]
+    return dict(
+        goodput_frac=round(med(lambda s: s.goodput_frac), 4),
+        tok_per_s=round(med(lambda s: s.throughput_tok_s), 1),
+        makespan=round(med(lambda s: s.makespan), 2),
+        ttft_p95=round(statistics.median(
+            p.get("ttft_p95") or 0.0 for p in lat), 3),
+        accept_rate=round(sums[-1].accept_rate, 4),
+        n_finished=sums[-1].n_finished,
+        digest=digs[0])
+
+
+def _sim_arm(wl: WorkloadSpec, scheduler: str, depth: int) -> dict:
+    s = run_experiment(scheduler, spec=wl,
+                       engine_cfg=EngineConfig(spec_depth_max=depth))
+    lat = s.per_type.get("latency", {})
+    return dict(goodput_frac=round(s.goodput_frac, 4),
+                tok_per_s=round(s.throughput_tok_s, 1),
+                makespan=round(s.makespan, 2),
+                ttft_p95=round(lat.get("ttft_p95") or 0.0, 3),
+                accept_rate=round(s.accept_rate, 4),
+                n_finished=s.n_finished)
+
+
+def spec_decode(quick: bool = True, tp: int = 1) -> List[dict]:
+    rows: List[dict] = []
+    reps = 2 if quick else 3
+
+    def add(backend, workload, scheduler, depth, arm, ident=None):
+        row = dict(bench="spec_decode", backend=backend, workload=workload,
+                   scheduler=scheduler, spec=depth, **arm)
+        if tp > 1:
+            row["tp"] = tp
+        if ident is not None:
+            row["streams_identical"] = ident
+        rows.append(row)
+        return row
+
+    for workload, wl_kw in (("chat", _SIM_CHAT), ("agentic", _SIM_AGENTIC)):
+        wl = WorkloadSpec(**wl_kw)
+        for depth in (0, 4):
+            t0 = time.time()
+            arm = _sim_arm(wl, "tempo", depth)
+            arm["wall_s"] = round(time.time() - t0, 1)
+            add("sim", workload, "tempo", depth, arm)
+
+    for workload, wl_kw, sched, depth in (
+            ("chat", _JAX_CHAT, "vllm", 6),
+            ("agentic", _JAX_AGENTIC, "gmg", 4)):
+        wl = WorkloadSpec(**wl_kw)
+        pair = {}
+        for d in (0, depth):
+            t0 = time.time()
+            arm = _jax_arm(wl, sched, d, reps=reps if workload == "chat"
+                           else 1, tp=tp)
+            arm["wall_s"] = round(time.time() - t0, 1)
+            pair[d] = arm
+        ident = pair[0]["digest"] == pair[depth]["digest"]
+        for d in (0, depth):
+            add("jax", workload, sched, d, pair[d], ident=ident)
+    return rows
+
+
+def check(rows: List[dict]) -> int:
+    """Relational gates (run under ``benchmarks.run --check``):
+
+    1. jax streams byte-identical spec-on vs spec-off (zero tolerance);
+    2. sim goodput: spec-on >= spec-off on chat AND agentic (the sim
+       clock is deterministic, so this is strict);
+    3. jax chat goodput: spec-on >= spec-off - tol, and spec-on tok/s
+       >= 0.9x spec-off — the floor catches the verify-overhead
+       regression class even when both arms meet every SLO.
+    """
+    def get(backend, workload, on) -> Optional[dict]:
+        for r in rows:
+            if (r.get("backend") == backend
+                    and r.get("workload") == workload
+                    and bool(r.get("spec")) == on):
+                return r
+        return None
+
+    fails: List[str] = []
+    for wl in ("chat", "agentic"):
+        for be in ("sim", "jax"):
+            off, on = get(be, wl, False), get(be, wl, True)
+            if off is None or on is None:
+                fails.append(f"spec_decode: missing {be}/{wl} arm")
+                continue
+            if be == "jax" and not (off.get("streams_identical")
+                                    and on.get("streams_identical")):
+                fails.append(f"spec_decode: jax/{wl} spec-on streams "
+                             "diverged from spec-off")
+            if be == "sim" and on["goodput_frac"] < off["goodput_frac"]:
+                fails.append(
+                    f"spec_decode: sim/{wl} goodput {on['goodput_frac']} "
+                    f"< spec-off {off['goodput_frac']}")
+            if be == "jax" and wl == "chat":
+                if on["goodput_frac"] < off["goodput_frac"] - _JAX_GF_TOL:
+                    fails.append(
+                        f"spec_decode: jax/chat goodput "
+                        f"{on['goodput_frac']} < spec-off "
+                        f"{off['goodput_frac']} - {_JAX_GF_TOL}")
+                if on["tok_per_s"] < _JAX_TOKS_FLOOR * off["tok_per_s"]:
+                    fails.append(
+                        f"spec_decode: jax/chat tok/s {on['tok_per_s']} "
+                        f"< {_JAX_TOKS_FLOOR}x spec-off "
+                        f"{off['tok_per_s']}")
+    for f in fails:
+        print(f"REGRESSION: {f}")
+    print("[check:spec_decode] relational gates: "
+          + ("OK" if not fails else f"{len(fails)} FAILURES"))
+    return 1 if fails else 0
+
+
+ALL = {"spec_decode": spec_decode}
+
+
+if __name__ == "__main__":
+    rows = spec_decode()
+    save("spec_decode", rows)
+    for r in rows:
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+    raise SystemExit(check(rows))

@@ -59,6 +59,11 @@ def main() -> None:
                     help="decode micro-steps per device dispatch on stable "
                     "decode-only steps (jax backend; DESIGN.md §10). Token "
                     "streams are byte-identical to --decode-steps 1")
+    ap.add_argument("--spec", type=int, default=0, metavar="N",
+                    help="speculative decoding: draft up to N tokens per "
+                    "lane (prompt-lookup drafter) and verify them in one "
+                    "batched forward (DESIGN.md §11). Token streams are "
+                    "byte-identical to --spec 0 (CI diffs the digests)")
     ap.add_argument("--prefix-cache", dest="prefix_cache",
                     action="store_true", default=True,
                     help="shared-prefix KV reuse (default on)")
@@ -86,7 +91,8 @@ def main() -> None:
         engine_cfg = EngineConfig(max_batch=8, prefill_budget=32,
                                   prefix_cache=args.prefix_cache,
                                   tp=args.tp,
-                                  decode_steps=args.decode_steps)
+                                  decode_steps=args.decode_steps,
+                                  spec_depth_max=args.spec)
         backend_kwargs = dict(arch="tinyllama-1.1b", num_blocks=64,
                               page=16, max_len=128, seed=0, tp=args.tp)
         schedulers = ("vllm", "tempo")
@@ -98,7 +104,8 @@ def main() -> None:
                                 duration=90.0, seed=0,
                                 system_prompt_len=256,
                                 shared_system_frac=0.5)
-        engine_cfg = EngineConfig(prefix_cache=args.prefix_cache)
+        engine_cfg = EngineConfig(prefix_cache=args.prefix_cache,
+                                  spec_depth_max=args.spec)
         backend_kwargs = None
         schedulers = ("vllm", "sarathi", "tempo")
     if args.scheduler:

@@ -284,6 +284,42 @@ class GroupedMarginScheduler(AnalyzedSchedulerBase):
                       ).set(lateness, t=view.now)
 
     # ------------------------------------------------------------------
+    # speculative depth policy (DESIGN.md §11)
+    # ------------------------------------------------------------------
+    # draft depth by margin group: slack/ahead lanes are already making
+    # their SLOs at one token per step, so verification compute is wasted
+    # on them (and hopeless lanes earn nothing from arriving faster);
+    # on-track lanes take a shallow window; late/critical lanes — the ones
+    # whose margin a >1 tokens/step rate can actually rescue — go deep
+    # (the engine clamps by EngineConfig.spec_depth_max and KV headroom)
+    SPEC_DEPTH = {"hopeless": 0, "late": 8, "critical": 8, "ontrack": 2,
+                  "slack": 0, "ahead": 0}
+    # below this EWMA accept rate the drafter is misfiring on the request
+    # (verification compute buys < ~1.2 tokens/step) — stop speculating
+    SPEC_EWMA_MIN = 0.15
+
+    def spec_depth(self, view: EngineView) -> Dict[int, int]:
+        depths: Dict[int, int] = {}
+        for r in view.requests.values():
+            if r.state == ReqState.FINISHED or r.done \
+                    or r.prefill_remaining > 0:
+                continue
+            if r.slo.kind == "none":
+                d = self.SPEC_DEPTH["ontrack"]   # best-effort: shallow
+            else:
+                d = self.SPEC_DEPTH[self._dispatch_group(r, view)]
+            ew = r.spec_accept_ewma
+            if d > 0 and ew is not None and ew < self.SPEC_EWMA_MIN:
+                d = 0
+            depths[r.rid] = d
+        if self.obs.enabled:
+            for g, d in self.SPEC_DEPTH.items():
+                self.obs.gauge(
+                    "sched_spec_depth", "draft depth granted per margin "
+                    "group (pre-clamp)", group=g).set(d, t=view.now)
+        return depths
+
+    # ------------------------------------------------------------------
     # allocation
     # ------------------------------------------------------------------
     _DISPATCH = ("critical", "late", "ontrack")   # slot order, tight first

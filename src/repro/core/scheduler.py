@@ -93,6 +93,18 @@ class SchedulerBase:
         has no step-coupled state, so any horizon is safe."""
         return 1 << 10
 
+    def spec_depth(self, view: EngineView) -> Dict[int, int]:
+        """Per-request speculative draft depth for this step (DESIGN.md
+        §11): {rid: max draft tokens to verify}.  An empty dict means "no
+        opinion" — the engine grants its configured ceiling
+        (``EngineConfig.spec_depth_max``) to every decode lane; a rid
+        missing from a non-empty dict also falls back to the ceiling.  The
+        engine further clamps every grant by the ceiling, the lane's
+        remaining output, and KV headroom for the drafted window.
+        Schedulers with SLO state override this to spend verification
+        compute where the margin needs it (see GroupedMarginScheduler)."""
+        return {}
+
 
 # ---------------------------------------------------------------------------
 # Shared Request-Analyzer machinery (Algorithm 1: AnalyzeRequest)

@@ -47,7 +47,7 @@ class SpeedProfile:
     samples: int = 0
 
     def update(self, step_time: float, prefill_tokens: int,
-               decode_seqs: int):
+               decode_seqs: int, verify_tokens: int = 0):
         """Fold one executed step into the EWMAs.
 
         Mixed steps are split between the profiles in proportion to the
@@ -55,18 +55,24 @@ class SpeedProfile:
         apportioning uses the running estimates, the estimates are updated
         from the apportioned observation).  Pure prefill / pure decode
         steps reduce to the unapportioned update exactly.
+
+        ``verify_tokens`` (speculative verification, DESIGN.md §11) are
+        compute-bound extra positions like prefill tokens, so they join
+        the prefill side of the apportioning — without this every verify
+        step would be charged to ``decode_step`` and inflate it by the
+        drafted window's compute.
         """
         self.samples += 1
         if step_time <= 0:
             return
-        est_p = prefill_tokens / max(self.prefill_tps, 1.0) \
-            if prefill_tokens > 0 else 0.0
+        p_eff = prefill_tokens + verify_tokens
+        est_p = p_eff / max(self.prefill_tps, 1.0) if p_eff > 0 else 0.0
         est_d = self.decode_step if decode_seqs > 0 else 0.0
         total = est_p + est_d
-        if prefill_tokens > 0:
+        if p_eff > 0:
             share = est_p / total if total > 0 else 1.0
             t_p = max(step_time * share, 1e-9)
-            tps = prefill_tokens / t_p
+            tps = p_eff / t_p
             self.prefill_tps += self.ewma * (tps - self.prefill_tps)
         if decode_seqs > 0:
             share = est_d / total if total > 0 else 1.0
@@ -75,21 +81,27 @@ class SpeedProfile:
 
 
 class StepCostModel:
-    """Online ridge fit:  t_step ≈ w · [1, p, 1{d>0}, d, ctx]
+    """Online ridge fit:  t_step ≈ w · [1, p, 1{d>0}, d, ctx, v]
 
     where p = prefill tokens this step, d = decode batch size, ctx = total
-    context tokens read by the decode batch.  The has-decode indicator
-    captures the per-step weight-read cost that is paid once regardless of
-    batch size (the dominant decode term on HBM-bound replicas); the d and
-    ctx coefficients price marginal batch composition.
+    context tokens read by the decode batch, and v = speculative verify
+    tokens (extra drafted positions scored beyond one per lane, DESIGN.md
+    §11).  The has-decode indicator captures the per-step weight-read cost
+    that is paid once regardless of batch size (the dominant decode term on
+    HBM-bound replicas); the d and ctx coefficients price marginal batch
+    composition; the v coefficient prices the compute of widening the
+    decode matmuls with a drafted window — without it every verify step's
+    extra time would be attributed to d/ctx and corrupt the margin
+    estimates of plain decode batches (the same mis-attribution failure
+    the mixed-step apportioning fix addressed for the scalar profile).
 
     Observations land in a sliding window; the model refits every
-    ``refit_every`` new samples (a 5×5 solve — microseconds).  ``predict``
+    ``refit_every`` new samples (a 6×6 solve — microseconds).  ``predict``
     returns None until the fit has support, letting callers fall back to
     the scalar ``SpeedProfile``.
     """
 
-    N_FEAT = 5
+    N_FEAT = 6
 
     def __init__(self, window: int = 2048, refit_every: int = 64,
                  ridge: float = 1e-4, min_samples: int = 48):
@@ -97,28 +109,35 @@ class StepCostModel:
         self.refit_every = refit_every
         self.ridge = ridge
         self.min_samples = min_samples
-        self._obs: List[Tuple[float, float, float, float, float]] = []
+        self._obs: List[Tuple[float, ...]] = []
         self._y: List[float] = []
         self._since_fit = 0
         self._w: Optional[np.ndarray] = None
         self.fits = 0
 
     # scale factors keep the normal equations well conditioned: token
-    # counts are O(1e3-1e5), step times O(1e-2)
-    _SCALE = np.array([1.0, 1e-3, 1.0, 1e-1, 1e-4])
+    # counts are O(1e3-1e5), step times O(1e-2).  The verify-token term
+    # is appended LAST so spec-off observations (v = 0 everywhere) leave
+    # the leading block of the normal equations — and thus the fitted
+    # coefficients — exactly where the 5-feature model put them
+    _SCALE = np.array([1.0, 1e-3, 1.0, 1e-1, 1e-4, 1e-2])
 
     @staticmethod
     def _feat(prefill_tokens: float, decode_seqs: float,
-              ctx_total: float) -> Tuple[float, ...]:
+              ctx_total: float, verify_tokens: float = 0.0
+              ) -> Tuple[float, ...]:
         return (1.0, float(prefill_tokens),
                 1.0 if decode_seqs > 0 else 0.0,
-                float(decode_seqs), float(ctx_total))
+                float(decode_seqs), float(ctx_total),
+                float(verify_tokens))
 
     def observe(self, step_time: float, prefill_tokens: int,
-                decode_seqs: int, ctx_total: float) -> None:
+                decode_seqs: int, ctx_total: float,
+                verify_tokens: int = 0) -> None:
         if step_time <= 0:
             return
-        self._obs.append(self._feat(prefill_tokens, decode_seqs, ctx_total))
+        self._obs.append(self._feat(prefill_tokens, decode_seqs, ctx_total,
+                                    verify_tokens))
         self._y.append(float(step_time))
         if len(self._obs) > self.window:
             del self._obs[: len(self._obs) - self.window]
@@ -142,14 +161,16 @@ class StepCostModel:
         return self._w is not None
 
     def predict(self, prefill_tokens: float, decode_seqs: float,
-                ctx_total: float) -> Optional[float]:
+                ctx_total: float, verify_tokens: float = 0.0
+                ) -> Optional[float]:
         """Predicted step time, or None before the first fit.  Clamped to
         a small positive floor — ridge noise must never produce a zero or
         negative step time (margins divide by it)."""
         if self._w is None:
             return None
         t = float(np.dot(self._w,
-                         self._feat(prefill_tokens, decode_seqs, ctx_total)))
+                         self._feat(prefill_tokens, decode_seqs, ctx_total,
+                                    verify_tokens)))
         return max(t, 1e-5)
 
 
@@ -161,11 +182,13 @@ class SLOTracker:
 
     # ------------------------------------------------------------------
     def on_step(self, step_time: float, prefill_tokens: int,
-                decode_seqs: int, ctx_total: Optional[float] = None):
-        self.profile.update(step_time, prefill_tokens, decode_seqs)
+                decode_seqs: int, ctx_total: Optional[float] = None,
+                verify_tokens: int = 0):
+        self.profile.update(step_time, prefill_tokens, decode_seqs,
+                            verify_tokens)
         if ctx_total is not None:
             self.cost_model.observe(step_time, prefill_tokens, decode_seqs,
-                                    ctx_total)
+                                    ctx_total, verify_tokens)
 
     # ------------------------------------------------------------------
     def est_prefill_time(self, tokens: int) -> float:

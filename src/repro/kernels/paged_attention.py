@@ -213,6 +213,199 @@ def fused_decode_attention(q, k_new, v_new, k_pages, v_pages, block_tables,
       q, k_new, v_new, k_pages, v_pages)
 
 
+def _verify_kernel(tables_ref, pos0_ref, width_ref, q_ref, kn_ref, vn_ref,
+                   k_ref, v_ref, o_ref, ko_ref, vo_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, page: int,
+                   npages: int, G: int, W: int):
+    """Speculative verification: W query rows per lane in one grid pass.
+
+    Window row s holds the lane's query at position pos0[b]+s (row 0 the
+    last accepted token, rows 1.. the drafted tokens); rows at or past
+    width[b] are padding.  All live rows' K/V entries are spliced into the
+    VMEM page copy first (draft KV — rows beyond the eventually-accepted
+    prefix become stale garbage the engine truncates / overwrites; they are
+    never attended because of the per-row causal mask), then each row
+    attends under its own context length pos0+s+1.
+
+    The per-row online-softmax bodies are UNROLLED python loops so every
+    row's dot_general shapes match ``_kernel`` exactly — that makes each
+    verified position's attention output bitwise identical to the
+    sequential single-token decode it replaces, which is what lets
+    spec-on token streams be byte-equal to spec-off (DESIGN.md §11)."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    p0 = pos0_ref[b]
+    width = width_ref[b]
+    k = k_ref[0]                                       # (page, KV, D)
+    v = v_ref[0]
+    for s in range(W):
+        ps = p0 + s
+        sel = (jax.lax.broadcasted_iota(jnp.int32, k.shape, 0) == ps % page) \
+            & (j == ps // page) & (s < width)
+        k = jnp.where(sel, kn_ref[0, s][None].astype(k.dtype), k)
+        v = jnp.where(sel, vn_ref[0, s][None].astype(v.dtype), v)
+    ko_ref[0] = k
+    vo_ref[0] = v
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    KV = kf.shape[1]
+    for s in range(W):
+        q = q_ref[0, s].astype(jnp.float32)            # (H, D)
+        qg = q.reshape(KV, G, q.shape[-1])
+        sc = jax.lax.dot_general(
+            qg, kf, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32) * scale  # (KV, G, page)
+        pos = j * page + jax.lax.broadcasted_iota(
+            jnp.int32, (KV, G, page), 2)
+        live = pos < p0 + s + 1
+        sc = jnp.where(live, sc, NEG_INF)
+
+        m_prev = m_scr[s]                               # (KV, G)
+        m_new = jnp.maximum(m_prev, jnp.max(sc, axis=2))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[s] = l_scr[s] * corr + jnp.sum(p, axis=2)
+        pv = jax.lax.dot_general(
+            p, vf, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)
+        acc_scr[s] = acc_scr[s] * corr[..., None] + pv
+        m_scr[s] = m_new
+
+    @pl.when(j == npages - 1)
+    def _finish():
+        H, D = o_ref.shape[2], o_ref.shape[3]
+        for s in range(W):
+            out = acc_scr[s] / jnp.maximum(l_scr[s], 1e-30)[..., None]
+            o_ref[0, s] = out.reshape(H, D).astype(o_ref.dtype)
+
+
+def fused_verify_attention(q, k_new, v_new, k_pages, v_pages, block_tables,
+                           pos0, widths, *, scale=None,
+                           interpret: bool = False):
+    """Batched speculative verification: append + attend W window rows per
+    lane in one device call (the multi-token generalization of
+    ``fused_decode_attention``; W=1 degenerates to it exactly).
+
+    q: (B, W, H, D); k_new/v_new: (B, W, KV, D) the window rows' entries;
+    pos0: (B,) the slot of row 0 (= context length before the window);
+    widths: (B,) live rows per lane, 1..W — rows past width are padding
+    whose outputs the caller discards and whose KV is never spliced.
+    Returns (out (B, W, H, D), k_pages, v_pages).
+
+    Two lowerings, same contract:
+
+    - real TPU: ``_verify_multirow``, a single grid pass scoring all W
+      rows per lane against each page block while it is resident in VMEM
+      (one pool read for the whole window).
+    - interpret mode (CPU CI): W chained ``fused_decode_attention`` calls
+      through the aliased page pool.  XLA's CPU fusion re-tiles the
+      multi-row kernel's unrolled reductions into a different f32
+      accumulation order than the single-row decode kernel (observed:
+      1-ulp drift on one KV group once W >= 3), which would break the
+      spec-on == spec-off stream byte-equality contract; reusing the
+      EXACT single-row program row by row makes each verified position's
+      math bitwise identical to the sequential decode it replaces —
+      parity by program reuse, not by numerical accident (DESIGN.md §11).
+    """
+    if interpret:
+        return _verify_unrolled(q, k_new, v_new, k_pages, v_pages,
+                                block_tables, pos0, widths, scale=scale)
+    return _verify_multirow(q, k_new, v_new, k_pages, v_pages, block_tables,
+                            pos0, widths, scale=scale, interpret=False)
+
+
+def _verify_unrolled(q, k_new, v_new, k_pages, v_pages, block_tables,
+                     pos0, widths, *, scale=None):
+    """Row-chained verification: the exact ``fused_decode_attention``
+    program applied W times through the aliased pool.  Rows at or past a
+    lane's width run with an all-scrap table (the same retired-lane
+    masking ``_scan_decode`` uses), so their KV lands on the scrap page
+    and their outputs are garbage the caller discards."""
+    B, W, H, D = q.shape
+    P = k_pages.shape[0]
+    scale = scale or D ** -0.5
+    scrap = jnp.full_like(block_tables, P - 1)
+    outs = []
+    kp, vp = k_pages, v_pages
+    for s in range(W):
+        tab_s = jnp.where(widths[:, None] > s, block_tables, scrap)
+        o_s, kp, vp = fused_decode_attention(
+            q[:, s], k_new[:, s], v_new[:, s], kp, vp, tab_s, pos0 + s,
+            scale=scale, interpret=True)
+        outs.append(o_s)
+    return jnp.stack(outs, axis=1), kp, vp
+
+
+def _verify_multirow(q, k_new, v_new, k_pages, v_pages, block_tables,
+                     pos0, widths, *, scale=None, interpret: bool = False):
+    """One-grid-pass verification kernel (real-TPU lowering of
+    ``fused_verify_attention``).  Pages the window writes into
+    (pos0//page .. (pos0+width-1)//page) are routed back to the pool;
+    every other visited page lands on the scrap page (pool index P-1)."""
+    B, W, H, D = q.shape
+    P, page, KV, _ = k_pages.shape
+    n_max = block_tables.shape[1]
+    G = H // KV
+    scale = scale or D ** -0.5
+
+    kernel = functools.partial(_verify_kernel, scale=scale, page=page,
+                               npages=n_max, G=G, W=W,
+                               fence_rows=interpret)
+
+    def kv_out_map(b, j, tab, pos0, width):
+        first = pos0[b] // page
+        last = (pos0[b] + width[b] - 1) // page
+        return (jnp.where((j >= first) & (j <= last), tab[b, j], P - 1),
+                0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, n_max),
+        in_specs=[
+            pl.BlockSpec((1, W, H, D),
+                         lambda b, j, tab, pos0, width: (b, 0, 0, 0)),
+            pl.BlockSpec((1, W, KV, D),
+                         lambda b, j, tab, pos0, width: (b, 0, 0, 0)),
+            pl.BlockSpec((1, W, KV, D),
+                         lambda b, j, tab, pos0, width: (b, 0, 0, 0)),
+            pl.BlockSpec((1, page, KV, D),
+                         lambda b, j, tab, pos0, width: (tab[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, page, KV, D),
+                         lambda b, j, tab, pos0, width: (tab[b, j], 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, W, H, D),
+                         lambda b, j, tab, pos0, width: (b, 0, 0, 0)),
+            pl.BlockSpec((1, page, KV, D), kv_out_map),
+            pl.BlockSpec((1, page, KV, D), kv_out_map),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((W, KV, G), jnp.float32),
+            pltpu.VMEM((W, KV, G), jnp.float32),
+            pltpu.VMEM((W, KV, G, D), jnp.float32),
+        ],
+    )
+    # aliases index the flattened operands INCLUDING the three
+    # scalar-prefetch args: k_pages is operand 6, v_pages operand 7
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, W, H, D), q.dtype),
+                   jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+                   jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype)],
+        input_output_aliases={6: 1, 7: 2},
+        interpret=interpret,
+    )(block_tables, pos0.astype(jnp.int32), widths.astype(jnp.int32),
+      q, k_new, v_new, k_pages, v_pages)
+
+
 def paged_kv_append(k_pages, v_pages, k_new, v_new, block_table, start,
                     n=None, scrap_page=None):
     """Chunked-prefill append: scatter a chunk of new KV entries into the

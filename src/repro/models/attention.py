@@ -251,6 +251,38 @@ def gqa_decode_paged(x, p, cfg, pages, block_tables, positions, *,
     return out, {"k": kp, "v": vp}
 
 
+def gqa_verify_paged(x, p, cfg, pages, block_tables, pos0, widths, *,
+                     interpret=False, ctx=None):
+    """Speculative verification attention: W window rows per lane in one
+    dispatch (``fused_verify_attention``; DESIGN.md §11).
+
+    x: (B, W, D) hidden states for the window tokens — row 0 the last
+    accepted token, rows 1.. the drafted tokens, rows at or past
+    ``widths[b]`` padding.  pos0: (B,) row 0's KV slot.  Rope positions are
+    pos0+s per row; the projections are the same einsums as
+    ``gqa_decode_paged`` batched over the row dim, so each row's q/k/v is
+    bitwise what the sequential decode step would have computed.
+    Returns (out (B, W, D), new pages)."""
+    from repro.kernels.paged_attention import fused_verify_attention
+    B, W, D = x.shape
+    H, Dh = p["wq"].shape[1], p["wq"].shape[2]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.positional == "rope":
+        positions = pos0[:, None] + jnp.arange(W)[None, :]     # (B, W)
+        cos, sin = rope_tables(positions, Dh, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    o, kp, vp = fused_verify_attention(
+        q, k, v, pages["k"], pages["v"], block_tables, pos0, widths,
+        scale=Dh ** -0.5, interpret=interpret)
+    out = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["wo"])
+    if ctx is not None:
+        out = ctx.psum_attn(out)
+    return out, {"k": kp, "v": vp}
+
+
 # ---------------------------------------------------------------------------
 # MLA (DeepSeek-style multi-head latent attention)
 # ---------------------------------------------------------------------------

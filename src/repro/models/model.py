@@ -321,6 +321,28 @@ class Model:
         logits = self.ctx.gather_vocab(logits)
         return logits[..., :self.cfg.vocab_size], new_pages
 
+    def verify_paged(self, params, pages, tokens, pos0, widths,
+                     block_tables, *, interpret: bool = False):
+        """Speculative verification forward (DESIGN.md §11): score all W
+        window positions per lane in one pass.  tokens: (B, W) i32 — row 0
+        the last accepted token, rows 1.. drafted tokens, rows at or past
+        ``widths[b]`` padding; pos0: (B,) row 0's KV slot.  Returns
+        (logits (B, W, V), new pages) — logits at EVERY window position, so
+        the sampler can accept/reject each draft and emit the bonus token.
+        Each row's logits are bitwise identical to the single-token decode
+        at that position (per-row unrolled verification kernel + row-stable
+        einsums), which is what makes spec-on streams byte-equal to
+        spec-off."""
+        x = self._embed(params, {"tokens": tokens}, "decode", index=0)
+        x, new_pages = stack_apply_paged(x, params, self.cfg, self.ctx,
+                                         "verify", pages, block_tables,
+                                         pos0, n=widths, interpret=interpret)
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"],
+                            preferred_element_type=jnp.float32)
+        logits = self.ctx.gather_vocab(logits)
+        return logits[..., :self.cfg.vocab_size], new_pages
+
     # ------------------------------------------------------------------
     def cache_specs(self, B: int, S: int):
         cfg = self.cfg

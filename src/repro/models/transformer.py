@@ -8,7 +8,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.attention import (gqa_apply, gqa_decode_paged,
-                                    gqa_prefill_paged, mla_apply)
+                                    gqa_prefill_paged, gqa_verify_paged,
+                                    mla_apply)
 from repro.models.layers import mlp, rms_norm
 from repro.models.mamba import mamba_apply
 from repro.models.moe import moe_apply
@@ -90,6 +91,12 @@ def layer_apply_paged(x, lp, mixer, ffn, cfg, ctx, mode, pages, tables, pos,
     if mode == "prefill":
         mix_out, new_pages = gqa_prefill_paged(h, lp, cfg, pages, tables,
                                                pos, n, ctx=ctx)
+    elif mode == "verify":
+        # speculative verification: ``pos`` is pos0 (B,), ``n`` the per-lane
+        # window widths (B,) — see stack_apply_paged
+        mix_out, new_pages = gqa_verify_paged(h, lp, cfg, pages, tables,
+                                              pos, n, interpret=interpret,
+                                              ctx=ctx)
     else:
         mix_out, new_pages = gqa_decode_paged(h, lp, cfg, pages, tables,
                                               pos, interpret=interpret,
@@ -108,7 +115,9 @@ def stack_apply_paged(x, params, cfg, ctx, mode, pages, tables, pos, n=None,
     sequence's (n_max,) block table, ``pos`` the chunk's start offset, ``n``
     the real chunk length (rows past it are padding).  mode "decode":
     ``tables`` is (B, n_max), ``pos`` the per-sequence write positions (B,).
-    Returns (x, new pages pytree)."""
+    mode "verify" (speculative decoding, DESIGN.md §11): x is (B, W, D)
+    window hidden states, ``pos`` the per-lane first-row positions (B,),
+    ``n`` the per-lane live widths (B,).  Returns (x, new pages pytree)."""
     new_prefix = []
     for i, (mixer, ffn) in enumerate(cfg.prefix_pattern):
         x, np_ = layer_apply_paged(x, params["prefix"][f"l{i}"], mixer, ffn,

@@ -85,6 +85,23 @@ class Backend:
         meaningful only where active."""
         raise NotImplementedError
 
+    # speculative decoding (DESIGN.md §11): backends that can score a
+    # drafted window and accept/reject it advertise supports_spec_decode
+    # and implement decode_verify_batch; the engine's spec path only
+    # engages when the flag is set AND the scheduler grants nonzero depth
+    supports_spec_decode: bool = False
+
+    def decode_verify_batch(self, reqs: List, tables: List[List[int]],
+                            depths: List[int]):
+        """One draft-then-verify step for every listed request: draft up
+        to ``depths[i]`` tokens for lane ``i``, score the whole window
+        (last accepted token + drafts) in one device call, and keep the
+        longest accepted prefix plus the bonus token.  Lanes with depth 0
+        ride along as plain one-token decode rows.  Returns a list of
+        per-lane ``(emitted, accepted, proposed)`` — tokens emitted this
+        step (>= 1), draft tokens accepted, draft tokens proposed."""
+        raise NotImplementedError
+
     def kv_swap_out(self, rid: int, block_table: List[int],
                     tokens: int) -> None:
         pass
@@ -107,8 +124,12 @@ class Backend:
         and the workload's synthetic output tokens are used instead)."""
         return None
 
-    def step_time(self, prefill_tokens: int,
-                  decode_ctxs: List[int]) -> float:
+    def step_time(self, prefill_tokens: int, decode_ctxs: List[int],
+                  verify_tokens: int = 0) -> float:
+        """``verify_tokens``: extra drafted positions scored this step
+        beyond the one token per lane a plain decode step computes
+        (speculative verification work).  Measured-wall-time backends
+        ignore it; model-based backends must price it."""
         raise NotImplementedError
 
 
@@ -169,6 +190,40 @@ class Sampler:
                             poss.astype(jnp.uint32))
         return jnp.argmax(z + g, axis=-1).astype(jnp.int32)
 
+    def verify_device(self, logits, inputs, rids, pos0, widths):
+        """On-device speculative accept/reject (DESIGN.md §11).
+
+        logits (B, W, V): the verify forward's logits at every window
+        position; inputs (B, W) i32: the window's input tokens (row 0 the
+        last accepted token, rows 1.. the drafts); pos0 (B,): row 0's
+        position; widths (B,): live rows per lane.  Returns
+        (targets (B, W) i32, emitted (B,) i32).
+
+        targets[b, s] is the token the target model samples at position
+        pos0+s — computed by the SAME (seed, rid, pos)-keyed sampler rows
+        spec-off decode uses, so it is bitwise the token the sequential
+        path would emit there (any temperature, not just greedy: the
+        sampler is a pure function of (logits, rid, pos)).  A draft is
+        accepted iff it EQUALS its position's target, so the emitted
+        prefix targets[b, :emitted[b]] (accepted drafts + one bonus
+        token) is byte-identical to what sequential decoding emits —
+        speculation only changes how many of those tokens arrive per
+        step, never their values."""
+        import jax.numpy as jnp
+        B, W, V = logits.shape
+        poss = pos0[:, None] + jnp.arange(W)[None, :]
+        flat = self.sample_device(logits.reshape(B * W, V),
+                                  jnp.repeat(rids, W), poss.reshape(-1))
+        targets = flat.reshape(B, W)
+        if W == 1:
+            return targets, jnp.ones((B,), jnp.int32)
+        # draft s (input row s+1) is verified against target row s; the
+        # accepted run is the leading all-match prefix of the live drafts
+        m = (inputs[:, 1:] == targets[:, :-1]) & \
+            (jnp.arange(1, W)[None, :] < widths[:, None])
+        accepted = jnp.sum(jnp.cumprod(m.astype(jnp.int32), axis=1), axis=1)
+        return targets, (accepted + 1).astype(jnp.int32)
+
 
 # ---------------------------------------------------------------------------
 class SimBackend(Backend):
@@ -180,19 +235,48 @@ class SimBackend(Backend):
     at prefill but still read on every decode step, exactly like a real
     replica."""
 
+    # the sim prices verify windows and models accept runs, so every
+    # scheduler/router/cluster test exercises the engine's spec path
+    supports_spec_decode: bool = True
+
     def __init__(self, n_params: float = 8e9,
                  kv_bytes_per_token: float = KV_BYTES_PER_TOKEN,
                  chips: int = 8, peak_flops: float = 197e12,
                  hbm_bw: float = 819e9, mfu: float = 0.45,
-                 overhead: float = 0.004):
+                 overhead: float = 0.004, spec_accept_rate: float = 0.7,
+                 seed: int = 0):
         self.n_params = n_params
         self.kv_bytes = kv_bytes_per_token
         self.chips = chips
         self.flops = peak_flops * chips * mfu
         self.bw = hbm_bw * chips * 0.7
         self.overhead = overhead
+        self.spec_accept_rate = spec_accept_rate
+        self.seed = seed
 
-    def step_time(self, prefill_tokens: int, decode_ctxs: List[int]) -> float:
+    def decode_verify_batch(self, reqs: List, tables: List[List[int]],
+                            depths: List[int]):
+        """Simulated draft-then-verify: the accept run for a lane is a
+        deterministic Bernoulli(``spec_accept_rate``) leading run keyed on
+        (seed, rid, decoded) — independent of batch composition and of
+        which step the lane reaches that decode offset on, mirroring the
+        real backend's composition-proof determinism."""
+        out = []
+        for r, d in zip(reqs, depths):
+            d = int(d)
+            if d <= 0:
+                out.append((1, 0, 0))
+                continue
+            rng = np.random.default_rng(
+                (self.seed, r.rid & 0x7FFFFFFF, r.decoded))
+            acc = 0
+            while acc < d and rng.random() < self.spec_accept_rate:
+                acc += 1
+            out.append((acc + 1, acc, d))
+        return out
+
+    def step_time(self, prefill_tokens: int, decode_ctxs: List[int],
+                  verify_tokens: int = 0) -> float:
         t = self.overhead
         if prefill_tokens:
             t += 2.0 * self.n_params * prefill_tokens / self.flops
@@ -200,6 +284,11 @@ class SimBackend(Backend):
             weights = 2.0 * self.n_params / self.bw
             kv = sum(decode_ctxs) * self.kv_bytes / self.bw
             t += weights + kv
+        if verify_tokens:
+            # extra drafted positions are compute-bound like prefill
+            # tokens: the weights are already resident for the decode
+            # pass, verification just widens the matmuls
+            t += 2.0 * self.n_params * verify_tokens / self.flops
         return t
 
     @classmethod

@@ -35,6 +35,12 @@ from repro.serving.kvcache import (BLOCK_TOKENS, KV_BYTES_PER_TOKEN,
 from repro.serving.request import (CollectiveDag, ReqState, Request)
 from repro.serving.workload import WorkloadGen
 
+# Accept-rate floor below which a request stops being granted draft depth
+# (engine-level clamp in _spec_step; GMG's margin policy applies the same
+# floor).  A rejected window costs its full width in forwards to emit one
+# token, so a lane whose EWMA sits under the floor is a net loss.
+SPEC_EWMA_FLOOR = 0.15
+
 
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -61,6 +67,13 @@ class EngineConfig:
     # classic per-token dispatch; backends without supports_multi_step
     # ignore it.  Token streams are byte-identical across settings.
     decode_steps: int = 1
+    # speculative decoding ceiling (DESIGN.md §11): max draft tokens a
+    # decode lane may verify per step.  0 disables the spec path entirely;
+    # otherwise the scheduler's spec_depth() grants per-lane depth up to
+    # this cap (further clamped by remaining output and KV headroom for
+    # the drafted window).  Token streams are byte-identical across
+    # settings — speculation changes arrival TIMES, never token values.
+    spec_depth_max: int = 0
 
 
 class ServeEngine:
@@ -128,6 +141,9 @@ class ServeEngine:
         self.cached_tokens = 0        # prompt tokens served from cache
         self.prefill_computed = 0     # prompt tokens actually computed
         self.cow_forks = 0            # shared pages forked before append
+        # speculative decoding accounting (Summary.accept_rate)
+        self.spec_proposed = 0        # draft tokens scored by verification
+        self.spec_accepted = 0        # ... that matched the target's sample
         # signed (predicted − actual is negated: dt − pred) step-time
         # residuals of the tracker's StepCostModel, one per step where a
         # fit existed — Summary reports |residual| p50/p95
@@ -180,6 +196,16 @@ class ServeEngine:
         self._m_resid = m.histogram(
             "engine_cost_residual_seconds",
             "abs(step-time cost-model prediction - actual)", buckets=tb)
+        self._m_spec_prop = m.counter(
+            "engine_spec_proposed_total",
+            "draft tokens scored by speculative verification")
+        self._m_spec_acc = m.counter(
+            "engine_spec_accepted_total",
+            "draft tokens accepted (matched the target's own sample)")
+        self._m_spec_rate = m.histogram(
+            "engine_spec_accept_rate",
+            "per-lane draft accept rate per verify step",
+            buckets=(0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0))
         self._m_ttft = {
             k: m.histogram("engine_ttft_seconds", "time to first token",
                            buckets=(0.01, 0.03, 0.1, 0.3, 1, 3, 10, 30,
@@ -612,6 +638,10 @@ class ServeEngine:
         if not prefill_tokens and not decode_ctxs and self._kv_blocked:
             self._force_evict()
 
+        if self._spec_step(decoded_reqs, decode_ctxs, prefill_tokens,
+                           protect):
+            return
+
         n = self._decode_horizon(dec, decoded_reqs, prefill_tokens, protect)
         if n > 1:
             # the horizon pre-allocated n tokens of block headroom per
@@ -683,6 +713,157 @@ class ServeEngine:
                 if self._trace:
                     self.tracer.event("finish", r.rid, self.now,
                                       self.replica, decoded=r.decoded)
+        for r in finished_now:
+            self.sched.on_finish(r, self._view())
+            if r.dag_id is not None:
+                self._maybe_advance_dag(r)
+
+    # ------------------------------------------------------------------
+    # speculative decoding (DESIGN.md §11)
+    # ------------------------------------------------------------------
+    def _spec_step(self, decoded_reqs, decode_ctxs, prefill_tokens,
+                   protect) -> bool:
+        """Draft-then-verify fast path: one engine step that may emit
+        several tokens per lane.  Engages on decode-only steps when the
+        config ceiling is nonzero, the backend supports verification, and
+        the scheduler grants at least one lane a nonzero depth; unlike
+        the multi-step scan it runs exactly ONE scheduler decision, so it
+        needs no batch-stability conditions.  Depth per lane is
+        min(scheduler grant, spec_depth_max, remaining-1), then the
+        drafted window's KV is pre-allocated — a lane that can't grow
+        falls back to depth 0 and rides along as a plain decode row.
+        After verification, rejected draft KV is rolled back by dropping
+        page refs (BlockManager.truncate); stale within-page writes are
+        ctx-masked and overwritten by the sequential path later."""
+        if (self.cfg.spec_depth_max < 1 or not decoded_reqs
+                or prefill_tokens
+                or not getattr(self.backend, "supports_spec_decode",
+                               False)):
+            return False
+        grants = self.sched.spec_depth(self._view())
+        depths = []
+        for r in decoded_reqs:
+            d = grants.get(r.rid, self.cfg.spec_depth_max)
+            # engine-level accept-rate guard, scheduler-agnostic: a lane
+            # the drafter keeps missing on pays a whole multi-token
+            # forward per emitted token, so once its EWMA falls below the
+            # floor it stops speculating regardless of policy (GMG applies
+            # the same gate inside its margin policy; FCFS/tempo get it
+            # only here)
+            ew = r.spec_accept_ewma
+            if ew is not None and ew < SPEC_EWMA_FLOOR:
+                d = 0
+            depths.append(max(0, min(d, self.cfg.spec_depth_max,
+                                     r.true_output_len - r.decoded - 1)))
+        if not any(depths):
+            return False
+        for i, r in enumerate(decoded_reqs):
+            if depths[i] and not self._ensure_kv(
+                    r.rid, r.prompt_len + r.decoded + 1 + depths[i],
+                    protect):
+                depths[i] = 0       # window doesn't fit: plain decode row
+        if not any(depths):
+            return False
+        if self._trace:
+            for r, d in zip(decoded_reqs, depths):
+                if d:
+                    self.tracer.event("spec_draft", r.rid, self.now,
+                                      self.replica, depth=d)
+        tables = [self.kv.block_table(r.rid) for r in decoded_reqs]
+        results = self.backend.decode_verify_batch(decoded_reqs, tables,
+                                                   depths)
+        vtok = sum(p for _, _, p in results)
+        for r, (e, _a, _p) in zip(decoded_reqs, results):
+            self.kv.truncate(r.rid, r.prompt_len + r.decoded + e)
+        self._account_spec_step(decoded_reqs, decode_ctxs, results, vtok)
+        for r, (e, a, p) in zip(decoded_reqs, results):
+            if p <= 0:
+                continue
+            self.spec_proposed += p
+            self.spec_accepted += a
+            self._m_spec_prop.inc(p, t=self.now)
+            self._m_spec_acc.inc(a, t=self.now)
+            rate = a / p
+            self._m_spec_rate.observe(rate, t=self.now)
+            if r.spec_accept_ewma is None:
+                r.spec_accept_ewma = rate
+            else:
+                r.spec_accept_ewma += 0.3 * (rate - r.spec_accept_ewma)
+            if self._trace:
+                self.tracer.event("spec_verify", r.rid, self.now,
+                                  self.replica, proposed=p, accepted=a,
+                                  emitted=e)
+        return True
+
+    def _account_spec_step(self, decoded_reqs, decode_ctxs, results,
+                           vtok: int) -> None:
+        """SLO accounting for one verify dispatch.  The cost model sees
+        the step as it ran — ONE observation with the verify-token
+        feature — while the clock/token artifacts are split into
+        max(emitted) micro-steps exactly like the multi-step scan: lane i
+        emits at micro-steps 0..emitted_i-1, so TTFT/TBT/token_times land
+        on the same evenly-spaced timeline a sequential dispatch of those
+        tokens would produce."""
+        dt_total = self.backend.step_time(0, decode_ctxs,
+                                          verify_tokens=vtok)
+        dt_total += self._step_swap / self.cfg.swap_bw
+        m = max(e for e, _, _ in results)
+        dt_each = dt_total / m
+        self._last_step_dt = dt_each
+        tr = self._tracker()
+        ctx_total = sum(decode_ctxs)
+        if tr is not None:
+            cm = getattr(tr, "cost_model", None)
+            pred = cm.predict(0, len(decoded_reqs), float(ctx_total),
+                              verify_tokens=vtok) if cm is not None \
+                else None
+            if pred is not None:
+                self.cost_residuals.append(dt_total - pred)
+                self._m_resid.observe(abs(dt_total - pred), t=self.now)
+            tr.on_step(dt_total, 0, len(decoded_reqs), float(ctx_total),
+                       verify_tokens=vtok)
+        finished_now = []
+        for s in range(m):
+            act = [r for r, (e, _, _) in zip(decoded_reqs, results)
+                   if s < e]
+            if not act:
+                break
+            self.now += dt_each
+            self.step += 1
+            self.step_log.append((self.now, 0, len(act),
+                                  sum(r.prompt_len + r.decoded
+                                      for r in act)))
+            self._m_step["decode"].observe(dt_each, t=self.now)
+            self._m_prefill_tok.observe(0, t=self.now)
+            self._m_decode_seqs.observe(len(act), t=self.now)
+            self._m_kv.set(1.0 - self.kv.available_frac, t=self.now)
+            for r in act:
+                r.decoded += 1
+                r.token_times.append(self.now)
+                if r.first_token_t is None:
+                    r.first_token_t = self.now
+                    self._m_ttft[r.slo.kind].observe(self.now - r.arrival,
+                                                     t=self.now)
+                    if self._trace:
+                        self.tracer.event("first_token", r.rid, self.now,
+                                          self.replica)
+                if r.done:
+                    r.state = ReqState.FINISHED
+                    r.finish_t = self.now
+                    if self.cfg.prefix_cache:
+                        self._prefix_register(r)
+                    self.kv.release(r.rid)
+                    self.backend.kv_release(r.rid)
+                    self.finished.append(r)
+                    finished_now.append(r)
+                    self._m_finished.inc(t=self.now)
+                    if r.decoded > 1 and r.first_token_t is not None:
+                        self._m_tpot[r.slo.kind].observe(
+                            (self.now - r.first_token_t) / (r.decoded - 1),
+                            t=self.now)
+                    if self._trace:
+                        self.tracer.event("finish", r.rid, self.now,
+                                          self.replica, decoded=r.decoded)
         for r in finished_now:
             self.sched.on_finish(r, self._view())
             if r.dag_id is not None:

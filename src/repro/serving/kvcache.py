@@ -362,6 +362,28 @@ class BlockManager:
         self.swapped_tokens -= a.tokens
         return a.tokens * self.kv_bytes_per_token
 
+    def truncate(self, rid: int, tokens: int) -> int:
+        """Shrink rid's allocation to cover exactly `tokens` — the
+        speculative-decoding rejection path (DESIGN.md §11): drafted
+        positions past the accepted prefix wrote KV into pages the window
+        over-allocated; whole pages past ceil(tokens/page) are just COW
+        reference drops (shared pages stay alive for their other
+        referents, registered pages fall back to the cold cache).  Stale
+        entries *inside* the kept tail page need no cleanup: the causal
+        context mask hides them and the next accepted tokens overwrite
+        them.  Returns the number of dropped page references."""
+        a = self.seqs.get(rid)
+        if a is None or a.swapped:
+            return 0
+        keep = -(-tokens // self.block_tokens)
+        dropped = 0
+        while len(a.blocks) > keep:
+            self._decref(a.blocks.pop())
+            dropped += 1
+        a.tokens = min(a.tokens, tokens)
+        a.cached_tokens = min(a.cached_tokens, a.tokens)
+        return dropped
+
     def block_table(self, rid: int) -> List[int]:
         a = self.seqs.get(rid)
         return list(a.blocks) if a else []

@@ -64,6 +64,15 @@ class Summary:
     quanta: int = 0
     cost_residual_p50: Optional[float] = None
     cost_residual_p95: Optional[float] = None
+    # speculative decoding (PR 8): draft tokens scored by verification and
+    # the subset that matched the target's own samples; zeros spec-off
+    spec_proposed: int = 0
+    spec_accepted: int = 0
+
+    @property
+    def accept_rate(self) -> float:
+        """Draft accept rate across the run (0.0 when spec was off)."""
+        return self.spec_accepted / max(self.spec_proposed, 1)
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -92,7 +101,8 @@ class Summary:
                     prefix_hit_rate=round(self.prefix_hit_rate, 4),
                     deferrals=self.deferrals, quanta=self.quanta,
                     resid_p50=_round(self.cost_residual_p50, 6),
-                    resid_p95=_round(self.cost_residual_p95, 6))
+                    resid_p95=_round(self.cost_residual_p95, 6),
+                    accept_rate=round(self.accept_rate, 4))
 
 
 def summarize(name: str, finished: List[Request], service: ServiceModel,
@@ -103,7 +113,8 @@ def summarize(name: str, finished: List[Request], service: ServiceModel,
               n_admitted: Optional[int] = None,
               shed: Optional[List[Request]] = None,
               deferrals: int = 0, quanta: int = 0,
-              cost_residuals: Optional[Sequence[float]] = None) -> Summary:
+              cost_residuals: Optional[Sequence[float]] = None,
+              spec_proposed: int = 0, spec_accepted: int = 0) -> Summary:
     """Aggregate a run.  ``n_admitted`` is the count of requests the
     engine(s) admitted — shed and never-finished requests are (n_admitted
     − n_finished) and count as SLO misses in ``goodput_frac``.  Omitting
@@ -164,7 +175,8 @@ def summarize(name: str, finished: List[Request], service: ServiceModel,
         prefix_hits=prefix_hits, prefix_lookups=prefix_lookups,
         deferrals=deferrals, quanta=quanta,
         cost_residual_p50=_pctl(resid_abs, 50),
-        cost_residual_p95=_pctl(resid_abs, 95))
+        cost_residual_p95=_pctl(resid_abs, 95),
+        spec_proposed=spec_proposed, spec_accepted=spec_accepted)
 
 
 # ---------------------------------------------------------------------------
@@ -210,7 +222,9 @@ def summarize_fleet(router: str, scheduler: str,
                     deferrals_by_replica: Optional[Dict[int, int]] = None,
                     quanta_by_replica: Optional[Dict[int, int]] = None,
                     residuals_by_replica: Optional[
-                        Dict[int, Sequence[float]]] = None
+                        Dict[int, Sequence[float]]] = None,
+                    spec_by_replica: Optional[
+                        Dict[int, Tuple[int, int]]] = None
                     ) -> FleetSummary:
     all_fin: List[Request] = [r for fin in finished_by_replica.values()
                               for r in fin]
@@ -224,6 +238,7 @@ def summarize_fleet(router: str, scheduler: str,
     dfr = deferrals_by_replica or {}
     qta = quanta_by_replica or {}
     rsd = residuals_by_replica or {}
+    spc = spec_by_replica or {}
     all_resid: List[float] = [x for rs in rsd.values() for x in rs]
     all_shed: List[Request] = [r for s in shd.values() for r in s]
     fleet = summarize(f"{scheduler}@{router}", all_fin, service, makespan,
@@ -233,7 +248,9 @@ def summarize_fleet(router: str, scheduler: str,
                       n_admitted=sum(adm.values()) if adm else None,
                       shed=all_shed,
                       deferrals=sum(dfr.values()), quanta=sum(qta.values()),
-                      cost_residuals=all_resid)
+                      cost_residuals=all_resid,
+                      spec_proposed=sum(v[0] for v in spc.values()),
+                      spec_accepted=sum(v[1] for v in spc.values()))
     pbr = preempt_by_replica or {}
     per_replica = {
         rid: summarize(f"{scheduler}@{router}/r{rid}", fin, service,
@@ -242,6 +259,8 @@ def summarize_fleet(router: str, scheduler: str,
                        shed=shd.get(rid),
                        deferrals=dfr.get(rid, 0), quanta=qta.get(rid, 0),
                        cost_residuals=rsd.get(rid),
+                       spec_proposed=spc.get(rid, (0, 0))[0],
+                       spec_accepted=spc.get(rid, (0, 0))[1],
                        **dict(zip(("prefill_tokens", "cached_tokens",
                                    "prefix_hits", "prefix_lookups"),
                                   pfx.get(rid, (0, 0, 0, 0)))))

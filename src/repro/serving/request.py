@@ -63,6 +63,11 @@ class Request:
     token_times: List[float] = dataclasses.field(default_factory=list)
     preemptions: int = 0
     sched_in_t: Optional[float] = None
+    # speculative decoding (DESIGN.md §11): EWMA of the per-verify-step
+    # draft accept rate (None until the first verify step).  Feeds the
+    # scheduler's depth policy — a request the drafter keeps missing on
+    # stops receiving verification compute.
+    spec_accept_ewma: Optional[float] = None
     # analyzer annotations
     pred_upper: Optional[float] = None   # QRF upper bound on output length
     pred_point: Optional[float] = None   # point estimate (SJF)

@@ -110,7 +110,9 @@ def run_experiment(scheduler: str = "tempo",
                      n_admitted=n_submitted, shed=eng.shed,
                      deferrals=getattr(sched, "n_deferrals", 0),
                      quanta=getattr(sched, "n_quanta", 0),
-                     cost_residuals=eng.cost_residuals)
+                     cost_residuals=eng.cost_residuals,
+                     spec_proposed=eng.spec_proposed,
+                     spec_accepted=eng.spec_accepted)
     if metrics_out:
         dump_all(metrics_out, registry=obs, tracer=tracer,
                  extra=summ.row())
@@ -244,6 +246,10 @@ def run_cluster_experiment(scheduler: str = "tempo",
                              for rep in cluster.replicas},
                          residuals_by_replica={
                              rep.rid: rep.engine.cost_residuals
+                             for rep in cluster.replicas},
+                         spec_by_replica={
+                             rep.rid: (rep.engine.spec_proposed,
+                                       rep.engine.spec_accepted)
                              for rep in cluster.replicas})
     if metrics_out:
         dump_all(metrics_out, registry=obs, tracer=tracer, extra=fs.row())

@@ -28,6 +28,10 @@ def sampled_from(elements):
     return _Strategy(lambda rng: xs[int(rng.integers(0, len(xs)))])
 
 
+def tuples(*strats):
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+
 def lists(elements, min_size=0, max_size=10):
     return _Strategy(lambda rng: [
         elements.draw(rng)

@@ -145,6 +145,35 @@ def test_tp2_multi_step_decode_streams_identical():
 
 
 @need2
+def test_tp2_spec_streams_identical():
+    """Speculative decoding under tensor parallelism: the verify forward
+    runs inside the shard_map and accept/reject happens on replicated
+    logits, so spec-on tp=2 streams must equal plain tp=1 byte-for-byte
+    (DESIGN.md §11)."""
+    def run(tp, depth):
+        be = PagedJaxBackend(num_blocks=16, page=16, max_len=64, seed=0,
+                             tp=tp)
+        eng = ServeEngine(be, make_scheduler("tempo", use_predictor=False),
+                          EngineConfig(max_batch=2, prefill_budget=16,
+                                       tp=tp, spec_depth_max=depth))
+        # prompt lengths whose greedy continuations repeat early enough
+        # for the n-gram drafter to fire within 12 output tokens
+        eng.load([Request(rid=i + 1, app="chatbot", arrival=0.0,
+                          prompt_len=20 + 3 * i, true_output_len=12,
+                          slo=SLOSpec("throughput", ttlt=1e6))
+                  for i in range(2)], [])
+        fin = eng.run()
+        assert len(fin) == 2
+        if depth:
+            assert eng.spec_proposed > 0, "spec path never engaged"
+        return {r.rid: list(be.generated[r.rid]) for r in fin}
+
+    ref = run(tp=1, depth=0)
+    assert run(tp=2, depth=4) == ref
+    assert run(tp=1, depth=4) == ref
+
+
+@need2
 def test_tp2_swap_roundtrip_byte_exact():
     """Evictions on the SHARDED pool (tp=2, 2 per-device blocks -> 4
     aggregate) must restore KV byte-exactly: streams equal the
