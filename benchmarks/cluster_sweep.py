@@ -80,4 +80,102 @@ def cluster_jax(quick: bool = True, tp: int = 1) -> List[dict]:
     return rows
 
 
-ALL = {"cluster_sweep": cluster_sweep, "cluster_jax": cluster_jax}
+def disagg(quick: bool = True) -> List[dict]:
+    """Colocated vs prefill/decode-disaggregated fleets (DESIGN.md §12).
+
+    The contended sim arm is prefill-heavy by construction: every single
+    carries a ~1.5k-token system prefix, so colocated replicas interleave
+    full 2048-token prefill chunks (~45 ms at the llama-8b roofline) into
+    decode steps and blow the tight per-token budget (slo_scale=0.25 →
+    tbt ≈ 25 ms), while the disaggregated pair keeps decode steps pure
+    and pays only the priced KV transfer per migration.  The jax arm
+    re-runs the cluster_jax workload 1 prefill + 1 decode and digests the
+    fleet-merged token streams against the colocated run — migration must
+    never change a single byte."""
+    from repro.serving.engine import EngineConfig
+
+    rows: List[dict] = []
+    spec = WorkloadSpec(rate=20.0, duration=12.0 if quick else 48.0,
+                        seed=5, mix=(3, 2, 0), slo_scale=0.25,
+                        system_prompt_len=1465, shared_system_frac=1.0)
+    for sched in ("vllm", "gmg"):
+        for scenario, router, roles in (
+                ("colocated", "slo-margin", None),
+                ("disagg", "disagg", ["prefill", "decode"])):
+            t0 = time.time()
+            f = run_cluster_experiment(sched, router=router, n_replicas=2,
+                                       spec=spec, warmup=192, roles=roles)
+            row = f.row()
+            row.update(bench="disagg_sim", scenario=scenario,
+                       backend="sim", wall_s=round(time.time() - t0, 1))
+            rows.append(row)
+
+    # jax arm: real decoding; the gate is byte-identity of the merged
+    # fleet streams, recorded as digest_match on the disagg row
+    jspec = WorkloadSpec(rate=1.5, duration=4.0 if quick else 12.0, seed=1,
+                         mix=(2, 1, 1), prompt_cap=40, output_cap=12,
+                         slo_scale=20.0)
+    jkw = dict(num_blocks=48, page=16, max_len=64)
+    digests = {}
+    for scenario, router, roles in (
+            ("colocated", "slo-margin", None),
+            ("disagg", "disagg", ["prefill", "decode"])):
+        t0 = time.time()
+        sink: List = []
+        f = run_cluster_experiment(
+            "tempo", router=router, n_replicas=2, spec=jspec, warmup=64,
+            backend="jax", engine_cfg=EngineConfig(),
+            backend_kwargs=dict(jkw), roles=roles, backend_sink=sink)
+        streams = sorted((rid, tuple(int(t) for t in toks))
+                         for bk in sink for rid, toks in bk.generated.items())
+        digests[scenario] = hash(tuple(streams))
+        row = f.row()
+        row.update(bench="disagg_jax", scenario=scenario, backend="jax",
+                   n_streams=len(streams),
+                   wall_s=round(time.time() - t0, 1))
+        if scenario == "disagg":
+            row["digest_match"] = bool(
+                digests["disagg"] == digests["colocated"])
+        rows.append(row)
+    return rows
+
+
+def disagg_check(rows: List[dict]) -> int:
+    """Relational gate for ``--check``: on the contended sim arm the
+    disaggregated fleet must reach at least the colocated goodput for
+    every scheduler, and the jax arm's merged token streams must be
+    byte-identical colocated-vs-disagg."""
+    failures = []
+    sim = [r for r in rows if r.get("bench") == "disagg_sim"]
+    # fleet rows name the scheduler "vllm@slo-margin" — pair the two
+    # scenarios by the base scheduler in front of the router suffix
+    base = lambda r: str(r["scheduler"]).split("@")[0]   # noqa: E731
+    for sched in sorted({base(r) for r in sim}):
+        sel = {r["scenario"]: r for r in sim if base(r) == sched}
+        if "colocated" not in sel or "disagg" not in sel:
+            failures.append(f"{sched}: missing colocated/disagg sim rows")
+            continue
+        co, di = sel["colocated"], sel["disagg"]
+        print(f"[check:disagg] {sched}: disagg goodput="
+              f"{di['goodput_frac']} vs colocated={co['goodput_frac']} "
+              f"(migrated {di['migrated_in']})")
+        if di["goodput_frac"] < co["goodput_frac"]:
+            failures.append(
+                f"{sched}: disagg goodput_frac {di['goodput_frac']} < "
+                f"colocated {co['goodput_frac']}")
+        if not di.get("migrated_in"):
+            failures.append(f"{sched}: disagg arm migrated nothing")
+    jx = [r for r in rows if r.get("bench") == "disagg_jax"
+          and r.get("scenario") == "disagg"]
+    if not jx:
+        failures.append("missing disagg jax row")
+    elif not jx[0].get("digest_match"):
+        failures.append("jax merged token streams differ "
+                        "colocated-vs-disagg (migration corrupted KV)")
+    for f in failures:
+        print(f"REGRESSION: {f}")
+    return 1 if failures else 0
+
+
+ALL = {"cluster_sweep": cluster_sweep, "cluster_jax": cluster_jax,
+       "disagg": disagg}

@@ -141,6 +141,9 @@ def main() -> None:
         if "spec_decode" in fresh:
             from benchmarks.spec_decode import check as spec_check
             code = spec_check(fresh["spec_decode"]) or code
+        if "disagg" in fresh:
+            from benchmarks.cluster_sweep import disagg_check
+            code = disagg_check(fresh["disagg"]) or code
         sys.exit(code)
 
 

@@ -21,6 +21,11 @@ partial sums (DESIGN.md §8).  Token streams are identical to --tp 1; the
 printed ``stream-digest`` lines make that checkable from the console
 (CI diffs them across --tp 1/2/4).  On CPU set
 XLA_FLAGS=--xla_force_host_platform_device_count=8 to simulate devices.
+
+--disagg P:D: serve the same workload on a disaggregated fleet — P
+prefill + D decode replicas with live KV migration and the role-aware
+router (DESIGN.md §12).  On --backend jax the printed stream digests are
+byte-identical to the colocated run (CI's smoke-disagg lane diffs them).
 """
 
 import argparse
@@ -31,14 +36,19 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.serving.engine import EngineConfig                # noqa: E402
-from repro.serving.run import make_backend, run_experiment   # noqa: E402
+from repro.serving.run import (make_backend,                 # noqa: E402
+                               run_cluster_experiment, run_experiment)
 from repro.serving.workload import WorkloadSpec              # noqa: E402
 
 
-def _stream_digest(backend) -> str:
-    """Order-independent digest of every request's generated tokens."""
-    streams = sorted((rid, tuple(toks))
-                     for rid, toks in backend.generated.items())
+def _stream_digest(backends) -> str:
+    """Order-independent digest of every request's generated tokens,
+    merged across one or many replica backends (rids are fleet-unique:
+    a migrated request's stream lives only on its final replica)."""
+    if not isinstance(backends, (list, tuple)):
+        backends = [backends]
+    streams = sorted((rid, tuple(toks)) for bk in backends
+                     for rid, toks in bk.generated.items())
     return hashlib.sha256(repr(streams).encode()).hexdigest()[:16]
 
 
@@ -73,7 +83,22 @@ def main() -> None:
                     help="enable telemetry (DESIGN.md §9): per-scheduler "
                     "metric/trace snapshots under DIR/<scheduler>/ plus a "
                     "static report.html in each")
+    ap.add_argument("--disagg", default=None, metavar="P:D",
+                    help="serve on a disaggregated fleet of P prefill + D "
+                    "decode replicas with live KV migration (DESIGN.md "
+                    "§12) instead of one colocated replica.  Token "
+                    "streams are byte-identical to the colocated run "
+                    "(CI diffs the digests)")
     args = ap.parse_args()
+    roles = None
+    if args.disagg:
+        try:
+            p, d = (int(x) for x in args.disagg.split(":"))
+        except ValueError:
+            ap.error("--disagg wants P:D, e.g. --disagg 1:1")
+        if p < 1 or d < 1:
+            ap.error("--disagg needs at least one replica per role")
+        roles = ["prefill"] * p + ["decode"] * d
 
     if args.backend == "jax":
         # real decoding: capped lengths so sequences fit the device pool
@@ -117,13 +142,21 @@ def main() -> None:
         # build the backend explicitly (fresh per scheduler) so the real
         # token streams are digestable after the run
         backend = make_backend(args.backend, backend_kwargs) \
-            if args.backend == "jax" else args.backend
+            if args.backend == "jax" and not roles else args.backend
         mdir = os.path.join(args.metrics_out, name) \
             if args.metrics_out else None
-        s = run_experiment(name, spec=spec, engine_cfg=engine_cfg,
-                           backend=backend,
-                           backend_kwargs=backend_kwargs,
-                           metrics_out=mdir)
+        if roles:
+            sink = []
+            f = run_cluster_experiment(
+                name, router="disagg", spec=spec, engine_cfg=engine_cfg,
+                backend=args.backend, backend_kwargs=backend_kwargs,
+                roles=roles, backend_sink=sink, metrics_out=mdir)
+            s, backend = f.fleet, sink
+        else:
+            s = run_experiment(name, spec=spec, engine_cfg=engine_cfg,
+                               backend=backend,
+                               backend_kwargs=backend_kwargs,
+                               metrics_out=mdir)
         if mdir:
             from repro.launch.dashboard import write_report
             write_report(mdir, title=f"Fleet telemetry — {name} "
@@ -136,7 +169,10 @@ def main() -> None:
               f"{s.cached_frac:>7.2f}")
         assert s.n_finished > 0 and s.goodput_frac > 0.0, \
             f"{name}@{args.backend}: no goodput"
-        if args.scenario != "mixed" and args.prefix_cache:
+        if roles:
+            print(f"  [disagg {args.disagg}] migrated "
+                  f"{s.migrated_in} requests (prefill -> decode)")
+        if args.scenario != "mixed" and args.prefix_cache and not roles:
             assert s.prefix_hits > 0, \
                 f"{name}@{args.backend}: prefix cache never hit"
         if args.backend == "jax":

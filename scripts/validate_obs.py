@@ -27,7 +27,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.obs import TERMINAL, parse_prometheus   # noqa: E402
 
 EVENT_NAMES = {"admit", "prefix_match", "prefill_chunk", "defer", "resume",
-               "preempt", "swap_in", "first_token", "finish", "shed"}
+               "preempt", "swap_in", "first_token", "finish", "shed",
+               "handoff_out", "transfer", "handoff_in"}
 
 
 def _fail(msg: str, failures: list) -> None:
@@ -60,6 +61,7 @@ def validate_dir(d: str) -> list:
         _fail("trace.jsonl missing", failures)
         return failures
     admitted, terminal, last_t = set(), set(), {}
+    mig = {}          # rid -> [n_handoff_out, n_transfer, n_handoff_in]
     n_events = 0
     with open(tr) as f:
         for i, line in enumerate(f):
@@ -89,6 +91,21 @@ def validate_dir(d: str) -> list:
                 admitted.add(rid)
             if name in TERMINAL:
                 terminal.add(rid)
+            if name in ("handoff_out", "transfer", "handoff_in"):
+                c = mig.setdefault(rid, [0, 0, 0])
+                c[("handoff_out", "transfer",
+                   "handoff_in").index(name)] += 1
+    # migration chains are complete: every handoff_out has exactly one
+    # transfer dispatch and one handoff_in landing (a request may migrate
+    # more than once over its life, but never half-migrate)
+    for rid, (n_out, n_tx, n_in) in sorted(mig.items()):
+        if not (n_out == n_tx == n_in):
+            _fail(f"r{rid}: broken migration chain "
+                  f"(handoff_out={n_out}, transfer={n_tx}, "
+                  f"handoff_in={n_in})", failures)
+    if mig:
+        print(f"  migrations: {sum(c[0] for c in mig.values())} chains "
+              f"over {len(mig)} requests OK")
     open_chains = admitted - terminal
     if open_chains:
         _fail(f"{len(open_chains)} admitted requests never reached a "

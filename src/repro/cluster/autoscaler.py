@@ -33,6 +33,12 @@ class AutoscalerConfig:
     max_replicas: int = 8
     min_samples: int = 16          # finishes needed before acting on goodput
     cold_start_s: float = 2.0      # new replica boots this long after spawn
+    # role specialisation (DESIGN.md §12): flip a MIXED replica to the
+    # starved role when one role's backlog exceeds role_ratio× the other
+    # for role_streak consecutive observations (same cooldown as scaling)
+    role_ratio: float = 2.0
+    role_streak: int = 3
+    role_floor: float = 0.5        # ignore imbalance below this absolute load
 
 
 class Autoscaler:
@@ -46,6 +52,9 @@ class Autoscaler:
         self._fin: Deque[Tuple[float, bool]] = deque()
         self._last_action_t = -1e18
         self.actions: list = []        # (t, "+1"/"-1", n_active_after)
+        # role-flip streak state (decide_role)
+        self._role_bias: Optional[str] = None
+        self._role_streak = 0
 
     # ------------------------------------------------------------------
     def observe_finish(self, req: Request, t: float) -> None:
@@ -88,3 +97,37 @@ class Autoscaler:
                              direction="down").inc(t=t)
             return -1
         return 0
+
+    # ------------------------------------------------------------------
+    def decide_role(self, t: float, prefill_load: float,
+                    decode_load: float, n_mixed: int) -> Optional[str]:
+        """Role specialisation for a disaggregated fleet (DESIGN.md §12):
+        flip ONE mixed replica toward the starved role when that role's
+        backlog has exceeded ``role_ratio``× the other's (both in
+        step-equivalents per capable replica) for ``role_streak``
+        consecutive observations.  Shares the scaling cooldown and resets
+        its streak whenever the imbalance direction changes, so transient
+        waves never flip roles.  Returns "prefill"/"decode" or None."""
+        c = self.cfg
+        want: Optional[str] = None
+        if prefill_load > c.role_floor and \
+                prefill_load > c.role_ratio * max(decode_load, 1e-9):
+            want = "prefill"
+        elif decode_load > c.role_floor and \
+                decode_load > c.role_ratio * max(prefill_load, 1e-9):
+            want = "decode"
+        if want is None or want != self._role_bias:
+            self._role_bias = want
+            self._role_streak = 1 if want else 0
+            return None
+        self._role_streak += 1
+        if (n_mixed < 1 or self._role_streak < c.role_streak
+                or t - self._last_action_t < c.cooldown):
+            return None
+        self._last_action_t = t
+        self._role_bias = None
+        self._role_streak = 0
+        self.actions.append((t, f"role->{want}", n_mixed - 1))
+        self.obs.counter("autoscaler_role_flip_total",
+                         "mixed replicas specialised", role=want).inc(t=t)
+        return want

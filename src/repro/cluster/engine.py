@@ -41,13 +41,19 @@ class Replica:
         self._fin_cursor = 0           # engine.finished already harvested
 
     # -- router-facing load signals ------------------------------------
+    @property
+    def role(self) -> str:
+        """Replica role in a disaggregated fleet (DESIGN.md §12)."""
+        return getattr(self.engine.cfg, "role", "mixed")
+
     def live_count(self) -> int:
         return sum(1 for r in self.engine.requests.values()
                    if r.state != ReqState.FINISHED)
 
     def queue_len(self) -> int:
-        """Live requests plus not-yet-admitted queued ones."""
-        q = self.live_count()
+        """Live requests plus not-yet-admitted queued ones (including
+        in-flight migrations addressed here)."""
+        q = self.live_count() + self.engine.inbound_count
         for kind, obj in self.engine.pending_items():
             q += 1 if kind == "r" else len(obj[1])
         return q
@@ -85,6 +91,9 @@ class ClusterEngine:
         self._next_rid = n_replicas
         self.now = 0.0                   # fleet clock (max event time seen)
         self.routed: Dict[int, int] = {rep.rid: 0 for rep in self.replicas}
+        self.migrations = 0              # completed handoff_out dispatches
+        # (t, replica_id, new_role) at every autoscaler role flip
+        self.role_timeline: List[Tuple[float, int, str]] = []
         # (t, n_active) recorded at every fleet-size change
         self.replica_timeline: List[Tuple[float, int]] = [(0.0, n_replicas)]
         self.obs.gauge("cluster_active_replicas", "active fleet size"
@@ -140,6 +149,7 @@ class ClusterEngine:
                 continue
             self.now = max(self.now, rep.engine.now)
             self._harvest(rep)
+            self._maybe_migrate(rep)
             if rep.draining and rep.engine.peek_next_event() is None:
                 rep.retired_at = rep.engine.now
         for rep in self.replicas:              # drain stragglers' stats
@@ -157,6 +167,51 @@ class ClusterEngine:
                 self.autoscaler.observe_finish(r, r.finish_t)
             self._maybe_scale(self.now)
 
+    # ------------------------------------------------------------------
+    # Live KV migration (DESIGN.md §12): after a prefill replica's step,
+    # offer every request that just finished its prompt to the router for
+    # decode placement elsewhere.  The router prices the wire transfer
+    # against destination margin and may return None — the request then
+    # simply decodes locally (the TTFT fallback).  Only singles migrate:
+    # DAGs are dispatched replica-atomically (stage spawning is local).
+    def _maybe_migrate(self, rep: Replica) -> None:
+        if rep.role != "prefill" or rep.draining:
+            return
+        chooser = getattr(self.router, "choose_decode_target", None)
+        if chooser is None:
+            return          # role-unaware router: roles are routing-only
+        act = self.active()
+        if len(act) < 2:
+            return
+        eng = rep.engine
+        cands = [r for r in eng.requests.values()
+                 if r.state != ReqState.FINISHED and not r.done
+                 and r.dag_id is None and r.decoded == 0
+                 and r.prefill_remaining == 0]
+        for r in cands:
+            a = eng.kv.seqs.get(r.rid)
+            if a is None or a.swapped:
+                continue
+            t_xfer = eng.backend.migrate_time(
+                a.tokens * eng.kv.kv_bytes_per_token)
+            dst = chooser(r, rep, act, eng.now, t_xfer)
+            if dst is None or dst is rep:
+                continue
+            out = eng.handoff_out(r.rid)
+            if out is None:
+                continue
+            req, pkg = out
+            arrive = eng.now + t_xfer
+            if eng.tracer.enabled:
+                eng.tracer.event("transfer", req.rid, eng.now, rep.rid,
+                                 dst=dst.rid, bytes=int(pkg["bytes"]),
+                                 eta=round(arrive, 6))
+            dst.engine.enqueue_handoff(req, pkg, arrive)
+            self.migrations += 1
+            self.obs.counter("cluster_migrations_total",
+                             "prefill->decode KV handoffs",
+                             src=rep.rid, dst=dst.rid).inc(t=eng.now)
+
     def _maybe_scale(self, t: float) -> None:
         if self.autoscaler is None:
             return
@@ -170,6 +225,51 @@ class ClusterEngine:
             self._spawn(t)
         elif d < 0:
             self._drain(t, act)
+        else:
+            self._maybe_flip_role(t, act)
+
+    def _role_loads(self, act: List[Replica]) -> Tuple[float, float]:
+        """Per-role backlog in STEP-EQUIVALENTS per capable replica:
+        prefill load = pending prompt tokens / prefill budget, decode
+        load = live decode-phase requests / batch slots — comparable
+        units, so a ratio between them reads as relative pressure."""
+        pf_tok, dc_n = 0, 0
+        for rep in act:
+            for r in rep.engine.requests.values():
+                if r.state == ReqState.FINISHED or r.done:
+                    continue
+                if r.prefill_remaining > 0:
+                    pf_tok += r.prefill_remaining
+                else:
+                    dc_n += 1
+            dc_n += rep.engine.inbound_count
+            for kind, obj in rep.engine.pending_items():
+                for r in Router.item_requests(kind, obj):
+                    pf_tok += r.prompt_len
+        cfg = act[0].engine.cfg
+        pf_cap = sum(1 for rep in act if rep.role in ("prefill", "mixed"))
+        dc_cap = sum(1 for rep in act if rep.role in ("decode", "mixed"))
+        pf = pf_tok / max(cfg.prefill_budget, 1) / max(pf_cap, 1)
+        dc = dc_n / max(cfg.max_batch, 1) / max(dc_cap, 1)
+        return pf, dc
+
+    def _maybe_flip_role(self, t: float, act: List[Replica]) -> None:
+        flip = getattr(self.autoscaler, "decide_role", None)
+        if flip is None:
+            return
+        mixed = [rep for rep in act if rep.role == "mixed"]
+        pf, dc = self._role_loads(act)
+        role = flip(t, pf, dc, len(mixed))
+        if role is None:
+            return
+        # flip the emptiest mixed replica: least in-flight work whose
+        # phase mismatches the new specialisation
+        rep = min(mixed, key=lambda r: (r.queue_len(), r.rid))
+        rep.engine.cfg.role = role
+        self.role_timeline.append((t, rep.rid, role))
+        self.obs.counter("cluster_role_flips_total",
+                         "mixed replicas specialised by the autoscaler",
+                         role=role).inc(t=t)
 
     def _spawn(self, t: float) -> None:
         rid = self._next_rid

@@ -342,12 +342,83 @@ class PrefixAffinityRouter(SLOMarginRouter):
         return home
 
 
+# ---------------------------------------------------------------------------
+class DisaggRouter(SLOMarginRouter):
+    """Role-aware dispatch for a disaggregated fleet (DESIGN.md §12).
+
+    Arrivals: fresh singles land on PREFILL-capable replicas (prefill or
+    mixed) picked by the slo-margin signal; DAGs — dispatched atomically
+    and never migrated — land on DECODE-capable replicas, keeping the
+    pure-prefill pools free for migratable work (a DAG landing on any
+    replica still prefills there: roles are soft).  Either preference
+    falls back to the whole fleet when no replica of the wanted role is
+    active (e.g. every mixed replica got flipped).
+
+    Handoffs: when a prefill replica completes a prompt, the cluster asks
+    ``choose_decode_target`` for a decode replica.  Each candidate is
+    priced as transfer time (bytes over the backend's interconnect,
+    computed by the caller from the StepCostModel's KV geometry) plus its
+    backlog wait, plus — when the destination scheduler publishes a GMG
+    margin census — a penalty per tight (late/critical) request the
+    landing stream would delay.  Migration is declined (decode stays
+    local, the TTFT fallback) when even the cheapest candidate would push
+    the request's first token past its TTFT budget while staying local
+    would not."""
+
+    name = "disagg"
+
+    @staticmethod
+    def _by_role(replicas: List, roles: Tuple[str, ...]) -> List:
+        sub = [rp for rp in replicas
+               if getattr(rp.engine.cfg, "role", "mixed") in roles]
+        return sub or replicas
+
+    def route(self, kind: str, obj, replicas: List, now: float):
+        roles = ("decode", "mixed") if kind == "dag" \
+            else ("prefill", "mixed")
+        return super().route(kind, obj, self._by_role(replicas, roles), now)
+
+    def choose_decode_target(self, req: Request, source, replicas: List,
+                             now: float, t_xfer: float):
+        """Destination for a prefill-complete request, or None to decode
+        locally.  Deterministic: ties break on replica id."""
+        cands = [rp for rp in replicas if rp is not source
+                 and getattr(rp.engine.cfg, "role", "mixed") != "prefill"]
+        if not cands:
+            return None
+        best, best_cost = None, None
+        for rp in cands:
+            tr = self._tracker(rp)
+            wait, live = self._backlog(rp, tr)
+            cost = t_xfer + wait
+            ms = getattr(rp.engine.sched, "margin_summary", None)
+            if ms is not None and live:
+                counts = ms["counts"]
+                tight = counts.get("late", 0) + counts.get("critical", 0)
+                # the landing stream delays each tight request by roughly
+                # one slot-share of its own remaining decode service
+                cost += tight * tr.est_decode_time(self._est_out(req)) \
+                    / max(rp.engine.cfg.max_batch, 1)
+            if best is None or (cost, rp.rid) < best_cost:
+                best, best_cost = rp, (cost, rp.rid)
+        if req.slo.kind == "latency" and req.first_token_t is None:
+            src_tr = self._tracker(source)
+            elapsed = now - req.arrival
+            step = src_tr.est_decode_time(1.0)
+            local_wait = self._backlog(source, src_tr)[0]
+            if elapsed + best_cost[0] + step > req.slo.ttft \
+                    and elapsed + local_wait + step <= req.slo.ttft:
+                return None
+        return best
+
+
 ROUTERS = {
     "round-robin": RoundRobinRouter,
     "jsq": JoinShortestQueueRouter,
     "least-kv": LeastKVPressureRouter,
     "slo-margin": SLOMarginRouter,
     "prefix-affinity": PrefixAffinityRouter,
+    "disagg": DisaggRouter,
 }
 
 

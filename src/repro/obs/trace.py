@@ -33,6 +33,10 @@ _SPAN_CLOSERS = {
     "first_token": TERMINAL,                    # decode phase
     "defer": ("resume",) + TERMINAL,
     "preempt": ("swap_in", "resume") + TERMINAL,
+    # live KV migration (DESIGN.md §12): handoff_out on the source opens
+    # the in-flight span, handoff_in on the destination closes it; the
+    # "transfer" instant marks the wire dispatch with bytes/dst attrs
+    "handoff_out": ("handoff_in",) + TERMINAL,
 }
 
 

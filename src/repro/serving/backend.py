@@ -117,6 +117,37 @@ class Backend:
     def kv_release(self, rid: int) -> None:
         pass
 
+    # -- live KV migration (DESIGN.md §12) -----------------------------
+    # Replica-to-replica page transfer: a prefill replica exports a
+    # request's pages, the cluster prices the wire via migrate_time, and
+    # the decode replica imports them.  The jax backend stages real page
+    # contents through host numpy; simulated backends hold no content, so
+    # the default payload (None) round-trips fine.
+
+    # interconnect bandwidth between replicas (B/s) for transfer pricing
+    # (bytes / bandwidth, same roofline style as step_time).  ~25 GB/s is
+    # a conservative datacenter-network figure — well under the 60 GB/s
+    # host swap path, so migration is never accidentally free.
+    interconnect_bw: float = 25e9
+
+    def migrate_time(self, nbytes: float) -> float:
+        """Seconds to move `nbytes` of KV to a peer replica."""
+        return nbytes / self.interconnect_bw
+
+    def kv_export_pages(self, rid: int, block_table: List[int]):
+        """Package rid's KV pages (plus any per-request generation state)
+        for migration to another replica, dropping local state.  Returns
+        an opaque payload for the destination's kv_import_pages."""
+        return None
+
+    def kv_import_pages(self, rid: int, payload,
+                        block_table: Optional[List[int]]) -> None:
+        """Install an exported payload under rid.  ``block_table`` names
+        the destination pages; ``None`` parks the payload host-side as
+        swapped-out state (arrival under pool pressure) for the ordinary
+        kv_swap_in path to restore later."""
+        pass
+
     def output_tokens(self, rid: int) -> Optional[List[int]]:
         """Tokens actually generated for rid, if the backend knows them —
         the engine registers prompt+output pages into the prefix cache

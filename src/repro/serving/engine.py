@@ -74,6 +74,16 @@ class EngineConfig:
     # the drafted window).  Token streams are byte-identical across
     # settings — speculation changes arrival TIMES, never token values.
     spec_depth_max: int = 0
+    # replica role in a disaggregated fleet (DESIGN.md §12).  A SOFT role:
+    # it steers the disagg router's placement and makes the cluster offer
+    # prefill-complete requests for migration off "prefill" replicas —
+    # the scheduler itself is role-blind, so a prefill replica that can't
+    # migrate (no target, TTFT at risk) simply decodes locally, and a
+    # DAG landed on any replica prefills there.  "mixed" (the default)
+    # neither sheds decode work nor attracts migrations preferentially;
+    # the autoscaler may flip a mixed replica's role under sustained
+    # role imbalance.
+    role: str = "mixed"          # "prefill" | "decode" | "mixed"
 
 
 class ServeEngine:
@@ -148,7 +158,16 @@ class ServeEngine:
         # residuals of the tracker's StepCostModel, one per step where a
         # fit existed — Summary reports |residual| p50/p95
         self.cost_residuals: List[float] = []
+        # live KV migration accounting (DESIGN.md §12): requests this
+        # replica handed off after prefill / landed for decode
+        self.migrated_out = 0
+        self.migrated_in = 0
         self._pending: List[Tuple[float, int, object]] = []
+        # in-flight migrations addressed to this replica: (arrive_t, seq,
+        # Request, payload pkg).  Kept separate from _pending — routers
+        # and queue metrics introspect pending_items() as ("r"/"dag")
+        # arrival pairs and must not see half-transferred requests.
+        self._inbound: List[Tuple[float, int, Request, dict]] = []
         self._seq = 0
         # last engine step's duration — the fast path's estimate of how
         # many micro-steps fit before the next pending arrival
@@ -202,6 +221,12 @@ class ServeEngine:
         self._m_spec_acc = m.counter(
             "engine_spec_accepted_total",
             "draft tokens accepted (matched the target's own sample)")
+        self._m_migrated_out = m.counter(
+            "engine_migrated_out_total",
+            "requests handed off to a decode replica after prefill")
+        self._m_migrated_in = m.counter(
+            "engine_migrated_in_total",
+            "migrated requests landed on this replica for decode")
         self._m_spec_rate = m.histogram(
             "engine_spec_accept_rate",
             "per-lane draft accept rate per verify step",
@@ -358,7 +383,7 @@ class ServeEngine:
         completes — truncating a run mid-DAG must not let the unspawned
         tail vanish from goodput_frac).  Equals admitted_count for a
         fully drained run."""
-        n = len(self.requests)
+        n = len(self.requests) + len(self._inbound)
         for kind, obj in self.pending_items():
             if kind == "r":
                 n += 1
@@ -370,6 +395,16 @@ class ServeEngine:
                 n += sum(dag.stage_sizes[dag.cur_stage + 1:])
         return n
 
+    def _next_arrival_t(self) -> Optional[float]:
+        """Earliest queued event — a workload arrival or an in-flight
+        migration landing — or None when both queues are empty."""
+        ts = []
+        if self._pending:
+            ts.append(self._pending[0][0])
+        if self._inbound:
+            ts.append(self._inbound[0][0])
+        return min(ts) if ts else None
+
     def peek_next_event(self) -> Optional[float]:
         """Earliest time this engine can make progress: its own clock while
         requests are live, else the next queued arrival; None when idle.
@@ -378,8 +413,9 @@ class ServeEngine:
         before it booted."""
         if self.has_live():
             return self.now
-        if self._pending:
-            return max(self._pending[0][0], self.now)
+        t = self._next_arrival_t()
+        if t is not None:
+            return max(t, self.now)
         return None
 
     def pending_items(self) -> List[Tuple[str, object]]:
@@ -388,7 +424,8 @@ class ServeEngine:
         return [(kind, obj) for _, _, (kind, obj) in self._pending]
 
     def admit_arrived(self) -> None:
-        """Admit every queued arrival whose time has been reached."""
+        """Admit every queued arrival whose time has been reached, and land
+        every in-flight migration whose transfer has completed."""
         while self._pending and self._pending[0][0] <= self.now:
             _, _, (kind, obj) = heapq.heappop(self._pending)
             if kind == "r":
@@ -397,6 +434,9 @@ class ServeEngine:
                 dag, reqs = obj
                 self.dags[dag.dag_id] = dag
                 self._on_stage_start(dag, reqs, stage=0)
+        while self._inbound and self._inbound[0][0] <= self.now:
+            _, _, req, pkg = heapq.heappop(self._inbound)
+            self.handoff_in(req, pkg)
 
     def step_once(self) -> bool:
         """Admit arrivals, jump the clock over an idle gap if needed, and
@@ -405,9 +445,10 @@ class ServeEngine:
             return False
         self.admit_arrived()
         if not self.has_live():
-            if not self._pending:
+            t = self._next_arrival_t()
+            if t is None:
                 return False
-            self.now = max(self.now, self._pending[0][0])
+            self.now = max(self.now, t)
             self.admit_arrived()
             if not self.has_live():
                 return False
@@ -419,15 +460,101 @@ class ServeEngine:
         while self.step < self.cfg.max_steps:
             self.admit_arrived()
             if not self.has_live():
-                if self._pending and (until is None
-                                      or self._pending[0][0] < until):
-                    self.now = max(self.now, self._pending[0][0])
+                t = self._next_arrival_t()
+                if t is not None and (until is None or t < until):
+                    self.now = max(self.now, t)
                     continue
                 break
             if until is not None and self.now >= until and not drain:
                 break
             self._execute(self.sched.schedule(self._view()))
         return self.finished
+
+    # ------------------------------------------------------------------
+    # Live KV migration (DESIGN.md §12): handoff_out / handoff_in
+    # ------------------------------------------------------------------
+    def enqueue_handoff(self, req: Request, pkg: dict, t: float) -> None:
+        """Queue a migrated request to land at time `t` (when its KV
+        transfer completes).  The cluster calls this on the destination
+        right after the source's handoff_out."""
+        self._seq += 1
+        heapq.heappush(self._inbound, (t, self._seq, req, pkg))
+
+    @property
+    def inbound_count(self) -> int:
+        return len(self._inbound)
+
+    def handoff_out(self, rid: int):
+        """Extract a live prefill-complete request for migration.  Returns
+        (req, pkg) — pkg bundles the backend's exported KV payload plus
+        size accounting for transfer pricing — or None when the request
+        is not in a migratable state (mid-prefill, already decoding as a
+        DAG stage, swapped out, or gone).  The request leaves this replica
+        entirely: its prompt pages are first published into the local
+        prefix index (followers still hit the prefill this replica paid
+        for — the export gathered a copy, so the device pages stay valid),
+        then KV and backend state are released and the rid is removed from
+        `requests`, so this replica's goodput denominator no longer counts
+        it; the destination's does, exactly once fleet-wide."""
+        r = self.requests.get(rid)
+        a = self.kv.seqs.get(rid)
+        if (r is None or r.done or r.state == ReqState.FINISHED
+                or r.dag_id is not None or r.prefill_remaining > 0
+                or a is None or a.swapped):
+            return None
+        payload = self.backend.kv_export_pages(rid, self.kv.block_table(rid))
+        pkg = dict(pages=payload, tokens=a.tokens, n_pages=len(a.blocks),
+                   bytes=a.tokens * self.kv.kv_bytes_per_token)
+        toks = r.meta.get("prompt_tokens")
+        if self.cfg.prefix_cache and toks is not None and r.decoded == 0 \
+                and a.tokens == r.prompt_len:
+            # every prompt position was written during prefill, so the
+            # full prompt is registrable content (unlike a finished
+            # request, whose final sampled token's slot is never written)
+            self.kv.register(rid, np.asarray(toks, np.int64)[:a.tokens])
+        self.kv.release(rid)
+        self.backend.kv_release(rid)
+        del self.requests[rid]
+        r.state = ReqState.WAITING
+        self.migrated_out += 1
+        self._m_migrated_out.inc(t=self.now)
+        if self._trace:
+            self.tracer.event("handoff_out", rid, self.now, self.replica,
+                              tokens=a.tokens)
+        return r, pkg
+
+    def handoff_in(self, req: Request, pkg: dict) -> None:
+        """Land a migrated request: materialize destination pages, import
+        the KV payload, and hand the request to the scheduler.  It arrives
+        with prefill complete — no prefill is recomputed and no
+        prefix-cache credit is claimed, so this replica's Summary counts
+        only the decode work it actually does.  Under pool pressure the
+        payload parks as swapped-out host state and the ordinary swap-in
+        path (`_ensure_kv`) restores it byte-exactly later."""
+        rid = req.rid
+        assert rid not in self.requests, f"r{rid} already on this replica"
+        n_tok = int(pkg["tokens"])
+        n_pages = int(pkg.get("n_pages")
+                      or -(-n_tok // self.kv.block_tokens))
+        req.state = ReqState.WAITING
+        req.meta["migrated"] = True
+        self.requests[rid] = req
+        self.migrated_in += 1
+        self._m_migrated_in.inc(t=self.now)
+        ok = self.kv.adopt(rid, n_pages, n_tok)
+        if not ok and self._evict_for(n_tok, {rid}):
+            ok = self.kv.adopt(rid, n_pages, n_tok)
+        if ok:
+            self.backend.kv_import_pages(rid, pkg["pages"],
+                                         self.kv.block_table(rid))
+        else:
+            # no room even after eviction: park host-side as swapped-out
+            self.kv.park_swapped(rid, n_tok)
+            self.backend.kv_import_pages(rid, pkg["pages"], None)
+        if self._trace:
+            self.tracer.event("handoff_in", rid, self.now, self.replica,
+                              tokens=n_tok, resident=int(ok))
+        self.sched.on_arrival(req, self._view())
 
     # ------------------------------------------------------------------
     def _on_stage_start(self, dag: CollectiveDag, reqs: List[Request],

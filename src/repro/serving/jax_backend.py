@@ -653,6 +653,57 @@ class PagedJaxBackend(Backend):
         self._prompts.pop(rid, None)
         self._tab_cache.pop(rid, None)
 
+    # -- live KV migration (DESIGN.md §12) ------------------------------
+    def kv_export_pages(self, rid: int, block_table: List[int]):
+        """Host-staged export for replica-to-replica migration: gather
+        rid's page contents to host numpy (the kv_swap_out path) and
+        bundle the prompt + generated-token state the destination needs to
+        continue the stream byte-identically — sampling is keyed
+        (seed, rid, pos), so with the same backend seed the destination
+        reproduces exactly the tokens this replica would have emitted.
+        Per-request local state is dropped: after export the request lives
+        on the destination.  The device pages themselves are NOT cleared —
+        the engine may first register them into its prefix index so local
+        followers still match the prefill this replica paid for."""
+        self._flush_prefill()     # the gather must see this step's writes
+        if block_table:
+            table = np.asarray(block_table, np.int32)
+            pages = jax.tree.map(
+                lambda p: np.asarray(self._gather(p, table)), self.pages)
+        else:
+            # swapped-out at export time: the host copy IS the content
+            pages = self._host.get(rid)
+        payload = dict(pages=pages,
+                       prompt=self._prompts.pop(rid, None),
+                       generated=self.generated.pop(rid, None))
+        self._host.pop(rid, None)
+        self._tab_cache.pop(rid, None)
+        return payload
+
+    def kv_import_pages(self, rid: int, payload,
+                        block_table: Optional[List[int]]) -> None:
+        """Install an exported payload: adopt the prompt/generated state
+        (so (seed, rid, pos) sampling keys line up) and scatter the page
+        contents into this pool — or park them host-side when
+        ``block_table`` is None (arrival under pool pressure; the ordinary
+        kv_swap_in path restores them once the engine frees blocks)."""
+        if payload is None:
+            return
+        if payload.get("prompt") is not None:
+            self._prompts[rid] = payload["prompt"]
+        if payload.get("generated") is not None:
+            self.generated[rid] = list(payload["generated"])
+        pages = payload.get("pages")
+        if pages is None:
+            return
+        if block_table:
+            table = np.asarray(block_table, np.int32)
+            self.pages = jax.tree.map(
+                lambda p, s: self._scatter(p, table, s), self.pages, pages)
+            self._commit_pages()
+        else:
+            self._host[rid] = pages
+
     def output_tokens(self, rid: int) -> Optional[List[int]]:
         """Real generated tokens — the engine registers prompt+output
         pages into the prefix cache under their TRUE content hash (the

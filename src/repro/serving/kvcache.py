@@ -254,15 +254,47 @@ class BlockManager:
                     n += ntoks
         return blocks, min(n, cap)
 
-    def adopt(self, rid: int, blocks: List[int], tokens: int) -> None:
-        """Attach a matched cached prefix to a fresh sequence (increfs;
-        resurrects cold blocks out of the LRU)."""
+    def adopt(self, rid: int, blocks, tokens: int) -> bool:
+        """Attach pages to a fresh sequence.  Two forms:
+
+        * ``blocks`` is a list — a matched cached prefix: incref every
+          block (resurrecting cold ones out of the LRU); ``tokens`` is the
+          cached length, credited as ``cached_tokens``.
+        * ``blocks`` is an int ``n_pages`` — live KV migration (DESIGN.md
+          §12): materialize that many FRESH private pages for a
+          migrated-in sequence of ``tokens`` context.  ``cached_tokens``
+          stays 0 — the content was computed on another replica, not
+          served from this pool's cache — so destination accounting never
+          claims prefix-cache credit for migrated work.  Returns False
+          (allocating nothing) when the pool can't supply the pages.
+        """
         assert rid not in self.seqs, f"r{rid} already allocated"
+        if isinstance(blocks, (int, np.integer)):
+            n_pages = int(blocks)
+            assert n_pages >= -(-tokens // self.block_tokens), \
+                f"{n_pages} pages cannot hold {tokens} tokens"
+            if n_pages > self.available_blocks:
+                return False
+            bs = [self._alloc() for _ in range(n_pages)]
+            self.seqs[rid] = SeqAlloc(blocks=bs, tokens=tokens)
+            self.peak_used = max(self.peak_used, self.used_blocks)
+            return True
         for b in blocks:
             self._incref(b)
         self.seqs[rid] = SeqAlloc(blocks=list(blocks), tokens=tokens,
                                   cached_tokens=tokens)
         self.peak_used = max(self.peak_used, self.used_blocks)
+        return True
+
+    def park_swapped(self, rid: int, tokens: int) -> None:
+        """Register a sequence whose KV lives host-side only — a migration
+        that landed under pool pressure (DESIGN.md §12).  Zero device
+        pages, ``swapped=True``: the ordinary swap-in path (``ensure`` +
+        ``Backend.kv_swap_in``) restores it once blocks free up, exactly
+        like a preempted-and-swapped local request."""
+        assert rid not in self.seqs, f"r{rid} already allocated"
+        self.seqs[rid] = SeqAlloc(blocks=[], tokens=tokens, swapped=True)
+        self.swapped_tokens += tokens
 
     def fork_for_append(self, rid: int, pos: int
                         ) -> Optional[Tuple[int, int]]:

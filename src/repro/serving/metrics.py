@@ -68,6 +68,14 @@ class Summary:
     # the subset that matched the target's own samples; zeros spec-off
     spec_proposed: int = 0
     spec_accepted: int = 0
+    # live KV migration (DESIGN.md §12): requests handed off after prefill
+    # / landed for decode.  A migrated request counts ONCE fleet-wide —
+    # the source drops it from its admitted set at handoff_out, the
+    # destination counts it (and its tokens) at handoff_in, and the
+    # destination's prefill_tokens never include the remotely-computed
+    # prompt — these counters make the flow auditable per replica
+    migrated_in: int = 0
+    migrated_out: int = 0
 
     @property
     def accept_rate(self) -> float:
@@ -102,7 +110,9 @@ class Summary:
                     deferrals=self.deferrals, quanta=self.quanta,
                     resid_p50=_round(self.cost_residual_p50, 6),
                     resid_p95=_round(self.cost_residual_p95, 6),
-                    accept_rate=round(self.accept_rate, 4))
+                    accept_rate=round(self.accept_rate, 4),
+                    migrated_in=self.migrated_in,
+                    migrated_out=self.migrated_out)
 
 
 def summarize(name: str, finished: List[Request], service: ServiceModel,
@@ -114,7 +124,8 @@ def summarize(name: str, finished: List[Request], service: ServiceModel,
               shed: Optional[List[Request]] = None,
               deferrals: int = 0, quanta: int = 0,
               cost_residuals: Optional[Sequence[float]] = None,
-              spec_proposed: int = 0, spec_accepted: int = 0) -> Summary:
+              spec_proposed: int = 0, spec_accepted: int = 0,
+              migrated_in: int = 0, migrated_out: int = 0) -> Summary:
     """Aggregate a run.  ``n_admitted`` is the count of requests the
     engine(s) admitted — shed and never-finished requests are (n_admitted
     − n_finished) and count as SLO misses in ``goodput_frac``.  Omitting
@@ -176,7 +187,8 @@ def summarize(name: str, finished: List[Request], service: ServiceModel,
         deferrals=deferrals, quanta=quanta,
         cost_residual_p50=_pctl(resid_abs, 50),
         cost_residual_p95=_pctl(resid_abs, 95),
-        spec_proposed=spec_proposed, spec_accepted=spec_accepted)
+        spec_proposed=spec_proposed, spec_accepted=spec_accepted,
+        migrated_in=migrated_in, migrated_out=migrated_out)
 
 
 # ---------------------------------------------------------------------------
@@ -224,6 +236,8 @@ def summarize_fleet(router: str, scheduler: str,
                     residuals_by_replica: Optional[
                         Dict[int, Sequence[float]]] = None,
                     spec_by_replica: Optional[
+                        Dict[int, Tuple[int, int]]] = None,
+                    migrated_by_replica: Optional[
                         Dict[int, Tuple[int, int]]] = None
                     ) -> FleetSummary:
     all_fin: List[Request] = [r for fin in finished_by_replica.values()
@@ -239,6 +253,7 @@ def summarize_fleet(router: str, scheduler: str,
     qta = quanta_by_replica or {}
     rsd = residuals_by_replica or {}
     spc = spec_by_replica or {}
+    mig = migrated_by_replica or {}
     all_resid: List[float] = [x for rs in rsd.values() for x in rs]
     all_shed: List[Request] = [r for s in shd.values() for r in s]
     fleet = summarize(f"{scheduler}@{router}", all_fin, service, makespan,
@@ -250,7 +265,9 @@ def summarize_fleet(router: str, scheduler: str,
                       deferrals=sum(dfr.values()), quanta=sum(qta.values()),
                       cost_residuals=all_resid,
                       spec_proposed=sum(v[0] for v in spc.values()),
-                      spec_accepted=sum(v[1] for v in spc.values()))
+                      spec_accepted=sum(v[1] for v in spc.values()),
+                      migrated_in=sum(v[0] for v in mig.values()),
+                      migrated_out=sum(v[1] for v in mig.values()))
     pbr = preempt_by_replica or {}
     per_replica = {
         rid: summarize(f"{scheduler}@{router}/r{rid}", fin, service,
@@ -261,6 +278,8 @@ def summarize_fleet(router: str, scheduler: str,
                        cost_residuals=rsd.get(rid),
                        spec_proposed=spc.get(rid, (0, 0))[0],
                        spec_accepted=spc.get(rid, (0, 0))[1],
+                       migrated_in=mig.get(rid, (0, 0))[0],
+                       migrated_out=mig.get(rid, (0, 0))[1],
                        **dict(zip(("prefill_tokens", "cached_tokens",
                                    "prefix_hits", "prefix_lookups"),
                                   pfx.get(rid, (0, 0, 0, 0)))))

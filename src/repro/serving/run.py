@@ -133,6 +133,8 @@ def run_cluster_experiment(scheduler: str = "tempo",
                            autoscaler_cfg=None,
                            backend: Union[str, Backend, None] = None,
                            backend_kwargs: Optional[Dict] = None,
+                           roles: Optional[List[str]] = None,
+                           backend_sink: Optional[List] = None,
                            obs=None, tracer=None,
                            metrics_out: Optional[str] = None
                            ) -> FleetSummary:
@@ -146,7 +148,14 @@ def run_cluster_experiment(scheduler: str = "tempo",
     With ``engine_cfg.tp > 1`` on the jax backend the fleet is N replicas ×
     tp-way device meshes: each replica gets its own tp-device slice of the
     local device pool (wrapping round-robin when N·tp exceeds it).
-    """
+
+    ``roles`` disaggregates the fleet (DESIGN.md §12): one role per
+    initial replica (overriding ``n_replicas`` to its length), e.g.
+    ``["prefill", "decode"]``; pair with ``router="disagg"`` to get the
+    migration path — other routers treat roles as inert metadata.
+    ``backend_sink``, when a list, collects every replica backend the
+    default factory builds, so callers can digest real token streams
+    fleet-wide after the run."""
     from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
     from repro.cluster.engine import ClusterEngine
     from repro.cluster.router import make_router
@@ -154,6 +163,8 @@ def run_cluster_experiment(scheduler: str = "tempo",
     spec = spec or WorkloadSpec()
     engine_cfg = engine_cfg or EngineConfig()
     service = service or ServiceModel()
+    if roles:
+        n_replicas = len(roles)
     if metrics_out:
         obs = obs if obs is not None else MetricsRegistry()
         tracer = tracer if tracer is not None else Tracer()
@@ -178,6 +189,13 @@ def run_cluster_experiment(scheduler: str = "tempo",
                     kw["devices"] = [devs[(rid * tp + i) % len(devs)]
                                      for i in range(tp)]
             return make_backend(backend, kw)
+    if backend_sink is not None:
+        _inner_bf = backend_factory
+
+        def backend_factory(rid: int):            # noqa: F811
+            b = _inner_bf(rid)
+            backend_sink.append(b)
+            return b
     base_sk = dict(sched_kwargs or {})
     if _service_aware(scheduler):
         base_sk.setdefault("service", service)
@@ -198,8 +216,10 @@ def run_cluster_experiment(scheduler: str = "tempo",
                 pred.warm_start(warm[0])
         # each replica reports into a labeled view of the fleet registry
         # (one instrument per metric × replica) and the shared tracer
-        return ServeEngine(backend_factory(rid), sched,
-                           dataclasses.replace(engine_cfg), workload=gen,
+        cfg = dataclasses.replace(engine_cfg)
+        if roles and rid < len(roles):
+            cfg.role = roles[rid]
+        return ServeEngine(backend_factory(rid), sched, cfg, workload=gen,
                            obs=None if obs is None
                            else obs.labeled(replica=rid),
                            tracer=tracer, replica=rid)
@@ -207,7 +227,7 @@ def run_cluster_experiment(scheduler: str = "tempo",
     if isinstance(router, str):
         # a caller-supplied router INSTANCE keeps its own ServiceModel
         kw = {"service": service} \
-            if router in ("slo-margin", "prefix-affinity") else {}
+            if router in ("slo-margin", "prefix-affinity", "disagg") else {}
         rt = make_router(router, **kw)
     else:
         rt = router
@@ -250,6 +270,10 @@ def run_cluster_experiment(scheduler: str = "tempo",
                          spec_by_replica={
                              rep.rid: (rep.engine.spec_proposed,
                                        rep.engine.spec_accepted)
+                             for rep in cluster.replicas},
+                         migrated_by_replica={
+                             rep.rid: (rep.engine.migrated_in,
+                                       rep.engine.migrated_out)
                              for rep in cluster.replicas})
     if metrics_out:
         dump_all(metrics_out, registry=obs, tracer=tracer, extra=fs.row())

@@ -195,6 +195,15 @@ class WorkloadGen:
     # ------------------------------------------------------------------
     def _mk_single(self, kind: str, t: float, app: str) -> Request:
         li, lo = self._lens(False)
+        # in the mixed scenario ``system_prompt_len`` prepends the system
+        # prefix to a ``shared_system_frac`` share of singles — the lever
+        # for prefill-heavy mixed workloads (disagg benches).  Guarded so
+        # the default spec (len 0) draws nothing extra from the RNG and
+        # historical streams are bit-identical.
+        sp = self.spec
+        if sp.system_prompt_len and \
+                self.rng.random() < sp.shared_system_frac:
+            li += sp.system_prompt_len
         r = Request(rid=self._next_rid(), app=app, arrival=t,
                     prompt_len=li, true_output_len=lo, slo=self._slo(kind))
         r.meta["hint"] = self._hint(lo)
