@@ -29,7 +29,7 @@ from benchmarks.common import RESULTS_DIR
 # fields that IDENTIFY a row (used when present; order fixed)
 ID_FIELDS = ("bench", "kernel", "scheduler", "workload", "backend",
              "router", "scenario", "prefix_cache", "n_replicas", "shape",
-             "tp", "spec")
+             "tp", "spec", "tenant", "trace", "arrival", "mode")
 
 # metric -> (abs tolerance, abs tolerance for jax-backend rows; None = skip)
 GATES = {

@@ -15,7 +15,8 @@ from typing import List
 
 from repro.cluster.autoscaler import AutoscalerConfig
 from repro.cluster.router import ROUTERS
-from repro.serving.run import run_cluster_experiment
+from repro.serving.run import (BackendSpec, ClusterSpec, ExperimentSpec,
+                               run_cluster)
 from repro.serving.workload import WorkloadSpec
 
 
@@ -31,8 +32,9 @@ def cluster_sweep(quick: bool = True) -> List[dict]:
             if n == 1 and router != "round-robin":
                 continue            # routers are equivalent at fleet size 1
             t0 = time.time()
-            f = run_cluster_experiment("tempo", router=router, n_replicas=n,
-                                       spec=spec, warmup=192)
+            f = run_cluster(ExperimentSpec(
+                scheduler="tempo", workload=spec, warmup=192,
+                cluster=ClusterSpec(router=router, n_replicas=n)))
             row = f.row()
             row.update(bench="replicas_x_router", n_replicas=n,
                        wall_s=round(time.time() - t0, 1))
@@ -42,11 +44,12 @@ def cluster_sweep(quick: bool = True) -> List[dict]:
     t0 = time.time()
     spec = WorkloadSpec(rate=6.0, duration=60.0 if quick else 240.0,
                         seed=3, ramp_peak=5.0)
-    f = run_cluster_experiment(
-        "tempo", router="slo-margin", n_replicas=1, spec=spec, warmup=192,
-        autoscale=True,
-        autoscaler_cfg=AutoscalerConfig(min_replicas=1, max_replicas=6,
-                                        cooldown=6.0, window=20.0))
+    f = run_cluster(ExperimentSpec(
+        scheduler="tempo", workload=spec, warmup=192,
+        cluster=ClusterSpec(
+            router="slo-margin", n_replicas=1, autoscale=True,
+            autoscaler_cfg=AutoscalerConfig(min_replicas=1, max_replicas=6,
+                                            cooldown=6.0, window=20.0))))
     row = f.row()
     row.update(bench="autoscale_ramp",
                timeline=[(round(t, 1), n) for t, n in f.replica_timeline],
@@ -68,10 +71,13 @@ def cluster_jax(quick: bool = True, tp: int = 1) -> List[dict]:
     rows = []
     for router in ("round-robin", "slo-margin"):
         t0 = time.time()
-        f = run_cluster_experiment(
-            "tempo", router=router, n_replicas=2, spec=spec, warmup=64,
-            backend="jax", engine_cfg=EngineConfig(tp=tp),
-            backend_kwargs=dict(num_blocks=48, page=16, max_len=64))
+        f = run_cluster(ExperimentSpec(
+            scheduler="tempo", workload=spec, warmup=64,
+            engine=EngineConfig(tp=tp),
+            backend=BackendSpec(kind="jax",
+                                kwargs=dict(num_blocks=48, page=16,
+                                            max_len=64)),
+            cluster=ClusterSpec(router=router, n_replicas=2)))
         row = f.row()
         row.update(bench="cluster_jax", wall_s=round(time.time() - t0, 1))
         if tp > 1:
@@ -103,8 +109,10 @@ def disagg(quick: bool = True) -> List[dict]:
                 ("colocated", "slo-margin", None),
                 ("disagg", "disagg", ["prefill", "decode"])):
             t0 = time.time()
-            f = run_cluster_experiment(sched, router=router, n_replicas=2,
-                                       spec=spec, warmup=192, roles=roles)
+            f = run_cluster(ExperimentSpec(
+                scheduler=sched, workload=spec, warmup=192,
+                cluster=ClusterSpec(router=router, n_replicas=2,
+                                    roles=roles)))
             row = f.row()
             row.update(bench="disagg_sim", scenario=scenario,
                        backend="sim", wall_s=round(time.time() - t0, 1))
@@ -122,10 +130,11 @@ def disagg(quick: bool = True) -> List[dict]:
             ("disagg", "disagg", ["prefill", "decode"])):
         t0 = time.time()
         sink: List = []
-        f = run_cluster_experiment(
-            "tempo", router=router, n_replicas=2, spec=jspec, warmup=64,
-            backend="jax", engine_cfg=EngineConfig(),
-            backend_kwargs=dict(jkw), roles=roles, backend_sink=sink)
+        f = run_cluster(ExperimentSpec(
+            scheduler="tempo", workload=jspec, warmup=64,
+            engine=EngineConfig(),
+            backend=BackendSpec(kind="jax", kwargs=dict(jkw), sink=sink),
+            cluster=ClusterSpec(router=router, n_replicas=2, roles=roles)))
         streams = sorted((rid, tuple(int(t) for t in toks))
                          for bk in sink for rid, toks in bk.generated.items())
         digests[scenario] = hash(tuple(streams))

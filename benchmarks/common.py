@@ -9,7 +9,7 @@ from typing import Dict, List, Optional
 
 from repro.core.service import ServiceModel
 from repro.serving.engine import EngineConfig, SimBackend
-from repro.serving.run import run_experiment
+from repro.serving.run import BackendSpec, ExperimentSpec, run
 from repro.serving.workload import WorkloadSpec
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
@@ -25,10 +25,11 @@ def grid(schedulers: List[str], spec: WorkloadSpec,
     rows = []
     for name in schedulers:
         t0 = time.time()
-        s = run_experiment(
-            name, spec=spec, service=service, engine_cfg=engine_cfg,
-            backend=backend, warmup=warmup,
-            sched_kwargs=(sched_kwargs_by_name or {}).get(name))
+        s = run(ExperimentSpec(
+            scheduler=name, workload=spec, service=service,
+            engine=engine_cfg, backend=BackendSpec(kind=backend),
+            warmup=warmup,
+            sched_kwargs=(sched_kwargs_by_name or {}).get(name)))
         row = s.row()
         row["scheduler"] = name
         row["wall_s"] = round(time.time() - t0, 1)

@@ -1,0 +1,224 @@
+"""Fleet-scale sweep: trace-driven multi-tenant workloads on large
+co-simulated fleets, plus the event-loop vectorization microbench
+(DESIGN.md §13).
+
+  PYTHONPATH=src python -m benchmarks.fleet_sweep [--full] [--check]
+      [--metrics-out DIR]
+  PYTHONPATH=src python -m benchmarks.run --only fleet [--full]
+
+Three arms, each a multi-tenant (free/pro/enterprise) fleet:
+
+  diurnal        mixed SLO traffic under the committed sinusoidal trace
+  spike          gmg + admission quotas under 4-6x flash crowds
+  deep_research  long compound DAGs with evolving cross-stage dependencies
+
+Quick (CI) scale: 20 replicas / ~2k requests per arm.  --full: 100
+replicas and a >=100k-request diurnal arm (the committed
+experiments/bench/fleet_sweep_full.json run).  Per-tenant goodput rows
+(bench=fleet_tenants) ride the regression gate alongside the fleet rows.
+
+``fleet_profile`` times the SAME fleet twice — vectorized argmin
+selection vs the legacy per-event O(replicas) scan — and prices a batch
+of roofline steps elementwise vs via ``SimBackend.step_time_batch``; the
+``--check`` gate requires the >=5x select-phase speedup.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.engine import EngineConfig, SimBackend
+from repro.serving.run import ClusterSpec, ExperimentSpec, TelemetrySpec, \
+    run_cluster
+from repro.serving.workload import WorkloadSpec
+
+TRACES_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "traces")
+TENANT_MIX = (0.6, 0.3, 0.1)          # free / pro / enterprise
+
+
+def _trace(name: str) -> str:
+    return os.path.join(TRACES_DIR, name + ".json")
+
+
+def _arms(quick: bool) -> List[Dict]:
+    """Per-arm (scenario, workload, scheduler, engine) configs.  Rates are
+    per-fleet; the diurnal full arm alone submits >=100k requests."""
+    n = 20 if quick else 100
+    mixed_rate = 3.0 * n              # moderate per-replica pressure;
+                                      # trace peaks push it to saturation
+    dur = 12.0 if quick else 90.0
+    return [
+        dict(scenario="mixed", arrival="trace", trace="diurnal",
+             scheduler="tempo", n_replicas=n,
+             spec=WorkloadSpec(rate=mixed_rate * (1.0 if quick else 4.0),
+                               duration=dur, seed=11,
+                               arrival="trace", trace=_trace("diurnal"),
+                               tenant_mix=TENANT_MIX)),
+        dict(scenario="mixed", arrival="trace", trace="spike",
+             scheduler="gmg", n_replicas=n,
+             engine=EngineConfig(tenant_quota=24),
+             spec=WorkloadSpec(rate=mixed_rate, duration=dur, seed=12,
+                               arrival="trace", trace=_trace("spike"),
+                               tenant_mix=TENANT_MIX)),
+        dict(scenario="deep_research", arrival="poisson", trace="",
+             scheduler="tempo", n_replicas=n,
+             spec=WorkloadSpec(scenario="deep_research", rate=0.15 * n,
+                               duration=dur, seed=13,
+                               tenant_mix=TENANT_MIX,
+                               system_prompt_len=128,
+                               shared_system_frac=0.5)),
+    ]
+
+
+def fleet_sweep(quick: bool = True,
+                metrics_out: Optional[str] = None) -> List[dict]:
+    rows: List[dict] = []
+    for arm in _arms(quick):
+        t0 = time.time()
+        mdir = os.path.join(metrics_out, arm["trace"] or arm["scenario"]) \
+            if metrics_out else None
+        f = run_cluster(ExperimentSpec(
+            scheduler=arm["scheduler"], workload=arm["spec"],
+            engine=arm.get("engine"), warmup=192,
+            cluster=ClusterSpec(router="tenant",
+                                n_replicas=arm["n_replicas"]),
+            telemetry=TelemetrySpec(metrics_out=mdir)))
+        ident = dict(scenario=arm["scenario"], arrival=arm["arrival"],
+                     trace=arm["trace"], n_replicas=arm["n_replicas"])
+        row = f.row()
+        row.update(bench="fleet_sweep", **ident,
+                   wall_s=round(time.time() - t0, 1))
+        rows.append(row)
+        # one gated goodput row per tenant class
+        for tenant, tr in sorted(f.fleet.per_tenant.items()):
+            rows.append(dict(bench="fleet_tenants", tenant=tenant, **ident,
+                             **tr))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+def fleet_profile(quick: bool = True) -> List[dict]:
+    """Event-loop phase attribution: the identical fleet run twice, with
+    vectorized argmin selection and with the legacy per-event scan, plus
+    the numpy batch step-pricing microbench."""
+    n = 20 if quick else 100
+    spec = WorkloadSpec(rate=2.0 * n, duration=10.0, seed=11,
+                        arrival="trace", trace=_trace("diurnal"),
+                        tenant_mix=TENANT_MIX)
+    rows: List[dict] = []
+    per_ev: Dict[str, float] = {}
+    for mode, vec in (("vectorized", True), ("scan", False)):
+        t0 = time.time()
+        f = run_cluster(ExperimentSpec(
+            scheduler="tempo", workload=spec, warmup=64,
+            cluster=ClusterSpec(router="round-robin", n_replicas=n,
+                                vectorized=vec, profile=True)))
+        prof = f.profile or {}
+        ev = max(int(prof.get("events", 0)), 1)
+        per_ev[mode] = prof["select"] / ev
+        rows.append(dict(
+            bench="fleet_profile", mode=mode, n_replicas=n,
+            events=int(prof.get("events", 0)),
+            select_us_per_event=round(1e6 * per_ev[mode], 3),
+            wall_s=round(time.time() - t0, 1),
+            goodput_frac=f.goodput_frac,
+            **{f"{k}_s": round(v, 4) for k, v in prof.items()
+               if k != "events"}))
+    assert rows[0]["goodput_frac"] == rows[1]["goodput_frac"], \
+        "vectorized and scan selection disagree"
+
+    # batch step pricing: M roofline steps elementwise vs one numpy pass
+    be = SimBackend.for_model("llama-8b")
+    rng = np.random.default_rng(0)
+    M = 20_000 if quick else 200_000
+    pf = rng.integers(0, 2048, M)
+    lanes = rng.integers(0, 64, M)
+    ctx = lanes * rng.integers(128, 2048, M)
+    vt = rng.integers(0, 8, M) * (lanes > 0)
+    t0 = time.perf_counter()
+    loop = [be.step_time(int(p), [int(c)] if n_ else [], int(v))
+            for p, c, n_, v in zip(pf, ctx, lanes, vt)]
+    t_loop = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    batch = be.step_time_batch(pf, ctx, lanes, vt)
+    t_batch = time.perf_counter() - t0
+    err = float(np.max(np.abs(np.asarray(loop) - batch)))
+    rows.append(dict(
+        bench="fleet_profile", mode="speedup", n_replicas=n,
+        select_speedup=round(per_ev["scan"] / max(per_ev["vectorized"],
+                                                  1e-12), 2),
+        pricing_speedup=round(t_loop / max(t_batch, 1e-12), 1),
+        pricing_max_err=err, pricing_steps=M))
+    return rows
+
+
+def fleet_check(rows: List[dict]) -> int:
+    """Relational gate for ``--check``: vectorized event selection must be
+    >=5x faster per event than the legacy scan, batch pricing must agree
+    with the per-step roofline exactly, and every fleet arm must carry a
+    per-tenant breakdown for all three classes."""
+    failures = []
+    sp = [r for r in rows if r.get("bench") == "fleet_profile"
+          and r.get("mode") == "speedup"]
+    if not sp:
+        failures.append("missing fleet_profile speedup row")
+    else:
+        s = sp[0]
+        print(f"[check:fleet] select speedup x{s['select_speedup']} "
+              f"pricing x{s['pricing_speedup']} "
+              f"(max err {s['pricing_max_err']:.2e})")
+        if s["select_speedup"] < 5.0:
+            failures.append(f"vectorized select speedup "
+                            f"{s['select_speedup']} < 5x over legacy scan")
+        if s["pricing_max_err"] > 1e-9:
+            failures.append(f"step_time_batch diverges from step_time "
+                            f"by {s['pricing_max_err']}")
+    fleet_rows = [r for r in rows if r.get("bench") == "fleet_sweep"]
+    for r in fleet_rows:
+        pt = r.get("per_tenant") or {}
+        if set(pt) != {"free", "pro", "enterprise"}:
+            failures.append(f"{r.get('scenario')}/{r.get('trace')}: "
+                            f"per-tenant breakdown incomplete: "
+                            f"{sorted(pt)}")
+    for f in failures:
+        print(f"REGRESSION: {f}")
+    return 1 if failures else 0
+
+
+ALL = {"fleet_sweep": fleet_sweep, "fleet_profile": fleet_profile}
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    from benchmarks.common import save
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="100 replicas, >=100k-request diurnal arm")
+    ap.add_argument("--check", action="store_true")
+    ap.add_argument("--metrics-out", default=None,
+                    help="dump per-arm telemetry (incl. per-tenant "
+                    "engine counters) under DIR/<arm>/")
+    args = ap.parse_args()
+    quick = not args.full
+    sweep = fleet_sweep(quick=quick, metrics_out=args.metrics_out)
+    prof = fleet_profile(quick=quick)
+    if quick:   # same layout benchmarks.run uses, so baselines line up
+        save("fleet_sweep", sweep)
+        save("fleet_profile", prof)
+    else:
+        save("fleet_sweep_full", sweep + prof)
+    rows = sweep + prof
+    for r in rows:
+        kv = ",".join(f"{k}={v}" for k, v in r.items()
+                      if not isinstance(v, (list, dict)))
+        print(f"fleet,{kv}", flush=True)
+    if args.check:
+        sys.exit(fleet_check(rows))

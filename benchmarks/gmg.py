@@ -17,7 +17,7 @@ import time
 from typing import Dict, List, Optional
 
 from repro.serving.engine import EngineConfig
-from repro.serving.run import run_experiment
+from repro.serving.run import BackendSpec, ExperimentSpec, run
 from repro.serving.workload import WorkloadSpec
 
 # the seeded mixed (latency+deadline+collective) contention point — also
@@ -52,10 +52,10 @@ def _sweep(workloads: Dict[str, WorkloadSpec], schedulers: List[str],
     for wname, spec in workloads.items():
         for sname in schedulers:
             t0 = time.time()
-            s = run_experiment(sname, spec=spec, engine_cfg=engine_cfg,
-                               backend=backend,
-                               backend_kwargs=backend_kwargs,
-                               warmup=warmup)
+            s = run(ExperimentSpec(
+                scheduler=sname, workload=spec, engine=engine_cfg,
+                backend=BackendSpec(kind=backend, kwargs=backend_kwargs),
+                warmup=warmup))
             rows.append(_row(sname, wname, backend, s, time.time() - t0))
     return rows
 

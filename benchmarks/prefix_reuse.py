@@ -14,7 +14,7 @@ import time
 from typing import List
 
 from repro.serving.engine import EngineConfig
-from repro.serving.run import run_experiment
+from repro.serving.run import ExperimentSpec, run
 from repro.serving.workload import WorkloadSpec
 
 
@@ -37,9 +37,9 @@ def prefix_reuse(quick: bool = True) -> List[dict]:
         base = None
         for cache in (False, True):
             t0 = time.time()
-            s = run_experiment(
-                "tempo", spec=spec,
-                engine_cfg=EngineConfig(prefix_cache=cache))
+            s = run(ExperimentSpec(
+                scheduler="tempo", workload=spec,
+                engine=EngineConfig(prefix_cache=cache)))
             row = s.row()
             row.update(
                 scenario=scenario, prefix_cache=cache,

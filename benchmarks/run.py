@@ -77,6 +77,7 @@ def main() -> None:
     from benchmarks.common import save
     from benchmarks.cluster_sweep import ALL as CLUSTER
     from benchmarks.decode_speed import ALL as DECODE_SPEED
+    from benchmarks.fleet_sweep import ALL as FLEET
     from benchmarks.gmg import ALL as GMG
     from benchmarks.paper_figs import ALL
     from benchmarks.prefix_reuse import ALL as PREFIX
@@ -88,6 +89,7 @@ def main() -> None:
     benches.update(GMG)
     benches.update(DECODE_SPEED)
     benches.update(SPEC)
+    benches.update(FLEET)
     benches["kernels"] = lambda quick=True: _kernel_bench()
     names = [n for n in benches if (not args.only or args.only in n)]
     baselines = {}
@@ -144,6 +146,10 @@ def main() -> None:
         if "disagg" in fresh:
             from benchmarks.cluster_sweep import disagg_check
             code = disagg_check(fresh["disagg"]) or code
+        if "fleet_profile" in fresh or "fleet_sweep" in fresh:
+            from benchmarks.fleet_sweep import fleet_check
+            code = fleet_check(fresh.get("fleet_sweep", [])
+                               + fresh.get("fleet_profile", [])) or code
         sys.exit(code)
 
 

@@ -38,7 +38,7 @@ from repro.core.baselines import make_scheduler
 from repro.core.service import ServiceModel
 from repro.serving.engine import EngineConfig, ServeEngine
 from repro.serving.metrics import summarize
-from repro.serving.run import run_experiment
+from repro.serving.run import ExperimentSpec, run
 from repro.serving.workload import WorkloadGen, WorkloadSpec
 
 # jax chat arm: FCFS burst sized so the queue drains through a paged
@@ -120,8 +120,8 @@ def _jax_arm(wl: WorkloadSpec, scheduler: str, depth: int, reps: int,
 
 
 def _sim_arm(wl: WorkloadSpec, scheduler: str, depth: int) -> dict:
-    s = run_experiment(scheduler, spec=wl,
-                       engine_cfg=EngineConfig(spec_depth_max=depth))
+    s = run(ExperimentSpec(scheduler=scheduler, workload=wl,
+                           engine=EngineConfig(spec_depth_max=depth)))
     lat = s.per_type.get("latency", {})
     return dict(goodput_frac=round(s.goodput_frac, 4),
                 tok_per_s=round(s.throughput_tok_s, 1),

@@ -36,8 +36,9 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.serving.engine import EngineConfig                # noqa: E402
-from repro.serving.run import (make_backend,                 # noqa: E402
-                               run_cluster_experiment, run_experiment)
+from repro.serving.run import (BackendSpec, ClusterSpec,     # noqa: E402
+                               ExperimentSpec, TelemetrySpec,
+                               make_backend, run, run_cluster)
 from repro.serving.workload import WorkloadSpec              # noqa: E402
 
 
@@ -61,10 +62,13 @@ def main() -> None:
     ap.add_argument("--scheduler", default=None,
                     help="serve ONLY this scheduler (e.g. gmg, tempo) "
                     "instead of the default comparison set")
-    ap.add_argument("--scenario", choices=("mixed", "multiturn", "agentic"),
+    ap.add_argument("--scenario",
+                    choices=("mixed", "multiturn", "agentic",
+                             "deep_research"),
                     default="mixed",
-                    help="mixed SLO traffic, or the prefix-reuse workloads "
-                    "(multi-turn chat / agentic chains)")
+                    help="mixed SLO traffic, the prefix-reuse workloads "
+                    "(multi-turn chat / agentic chains), or long compound "
+                    "research DAGs with evolving dependencies")
     ap.add_argument("--decode-steps", type=int, default=1,
                     help="decode micro-steps per device dispatch on stable "
                     "decode-only steps (jax backend; DESIGN.md §10). Token "
@@ -107,12 +111,16 @@ def main() -> None:
                                 mix=(2, 1, 1), prompt_cap=40, output_cap=12,
                                 slo_scale=20.0)
         else:
-            # per-segment caps keep accumulated histories in the pool
+            # per-segment caps keep accumulated histories in the pool;
+            # deep_research additionally needs small stage counts so the
+            # fan-in histories fit max_len
+            research = dict(research_stages=(2, 3), research_breadth=2) \
+                if args.scenario == "deep_research" else {}
             spec = WorkloadSpec(scenario=args.scenario, rate=0.5,
                                 duration=8.0, seed=0, turns=(2, 3),
                                 think_time=40.0, system_prompt_len=8,
                                 shared_system_frac=1.0, prompt_cap=8,
-                                output_cap=4, slo_scale=50.0)
+                                output_cap=4, slo_scale=50.0, **research)
         engine_cfg = EngineConfig(max_batch=8, prefill_budget=32,
                                   prefix_cache=args.prefix_cache,
                                   tp=args.tp,
@@ -125,7 +133,8 @@ def main() -> None:
         if args.scenario == "mixed":
             spec = WorkloadSpec(rate=8.0, duration=90.0, seed=0)
         else:
-            spec = WorkloadSpec(scenario=args.scenario, rate=2.0,
+            rate = 1.0 if args.scenario == "deep_research" else 2.0
+            spec = WorkloadSpec(scenario=args.scenario, rate=rate,
                                 duration=90.0, seed=0,
                                 system_prompt_len=256,
                                 shared_system_frac=0.5)
@@ -147,16 +156,18 @@ def main() -> None:
             if args.metrics_out else None
         if roles:
             sink = []
-            f = run_cluster_experiment(
-                name, router="disagg", spec=spec, engine_cfg=engine_cfg,
-                backend=args.backend, backend_kwargs=backend_kwargs,
-                roles=roles, backend_sink=sink, metrics_out=mdir)
+            f = run_cluster(ExperimentSpec(
+                scheduler=name, workload=spec, engine=engine_cfg,
+                backend=BackendSpec(kind=args.backend,
+                                    kwargs=backend_kwargs, sink=sink),
+                cluster=ClusterSpec(router="disagg", roles=roles),
+                telemetry=TelemetrySpec(metrics_out=mdir)))
             s, backend = f.fleet, sink
         else:
-            s = run_experiment(name, spec=spec, engine_cfg=engine_cfg,
-                               backend=backend,
-                               backend_kwargs=backend_kwargs,
-                               metrics_out=mdir)
+            s = run(ExperimentSpec(
+                scheduler=name, workload=spec, engine=engine_cfg,
+                backend=BackendSpec(kind=backend, kwargs=backend_kwargs),
+                telemetry=TelemetrySpec(metrics_out=mdir)))
         if mdir:
             from repro.launch.dashboard import write_report
             write_report(mdir, title=f"Fleet telemetry — {name} "

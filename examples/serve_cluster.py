@@ -18,7 +18,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.cluster.autoscaler import AutoscalerConfig   # noqa: E402
 from repro.cluster.router import ROUTERS                # noqa: E402
-from repro.serving.run import run_cluster_experiment    # noqa: E402
+from repro.serving.run import (ClusterSpec,             # noqa: E402
+                               ExperimentSpec, run_cluster)
 from repro.serving.workload import WorkloadSpec         # noqa: E402
 
 
@@ -31,11 +32,13 @@ def main():
 
     if args.autoscale:
         spec = WorkloadSpec(rate=6.0, duration=60.0, seed=3, ramp_peak=5.0)
-        f = run_cluster_experiment(
-            args.scheduler, router="slo-margin", n_replicas=1, spec=spec,
-            warmup=192, autoscale=True,
-            autoscaler_cfg=AutoscalerConfig(min_replicas=1, max_replicas=6,
-                                            cooldown=6.0, window=20.0))
+        f = run_cluster(ExperimentSpec(
+            scheduler=args.scheduler, workload=spec, warmup=192,
+            cluster=ClusterSpec(
+                router="slo-margin", n_replicas=1, autoscale=True,
+                autoscaler_cfg=AutoscalerConfig(
+                    min_replicas=1, max_replicas=6,
+                    cooldown=6.0, window=20.0))))
         print(f"fleet goodput={f.goodput_frac:.3f} "
               f"finished={f.fleet.n_finished}")
         print("replica-count timeline (t, n_active):")
@@ -47,8 +50,9 @@ def main():
     print(f"{'router':<14} {'goodput':>8} {'gain':>10} {'lat met':>8} "
           f"{'coll met':>9} {'routed/replica'}")
     for router in ROUTERS:
-        f = run_cluster_experiment(args.scheduler, router=router,
-                                   n_replicas=4, spec=spec, warmup=192)
+        f = run_cluster(ExperimentSpec(
+            scheduler=args.scheduler, workload=spec, warmup=192,
+            cluster=ClusterSpec(router=router, n_replicas=4)))
         pt = f.fleet.per_type
         get = lambda k: pt.get(k, {}).get("slo_met", float("nan"))
         routed = [n for _, n in sorted(f.routed.items())]

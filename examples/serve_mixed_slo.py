@@ -45,12 +45,12 @@ def main():
         print("real JAX decoding under Tempo: OK")
         return
 
-    from repro.serving.run import run_experiment
+    from repro.serving.run import ExperimentSpec, run
     from repro.serving.workload import WorkloadSpec
     spec = WorkloadSpec(rate=8.0, duration=120.0, seed=3, bursty=True)
     for name in ("vllm", "sarathi", "autellix", "sjf", "tempo",
                  "tempo-precise"):
-        s = run_experiment(name, spec=spec)
+        s = run(ExperimentSpec(scheduler=name, workload=spec))
         print(f"\n== {name}: gain={s.service_gain:.0f} "
               f"goodput={s.goodput_frac:.3f} tok/s={s.throughput_tok_s:.0f}")
         for kind, v in s.per_type.items():

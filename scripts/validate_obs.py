@@ -6,6 +6,10 @@ Checks, per directory:
   * ``metrics.prom`` parses under the strict dependency-free parser
     (``repro.obs.export.parse_prometheus``) and carries at least one
     sample;
+  * when per-tenant lifecycle counters are present
+    (``engine_tenant_*_total{tenant=...}``), each tenant's counts are
+    mutually consistent: finished + shed <= admitted and
+    quota_shed <= shed;
   * ``trace.jsonl`` rows match the event schema (name/rid/t/replica, known
     event names, monotone non-negative timestamps per request);
   * every admitted request's chain reaches a terminal event (finish/shed)
@@ -36,6 +40,32 @@ def _fail(msg: str, failures: list) -> None:
     failures.append(msg)
 
 
+def _check_tenants(samples, failures: list) -> None:
+    """Cross-check the per-tenant lifecycle counters (DESIGN.md §13).
+    Counters are lazily registered, so a missing series just means zero."""
+    by_tenant: dict = {}
+    for name, labels, value in samples:
+        if name.startswith("engine_tenant_") and "tenant" in labels:
+            which = name[len("engine_tenant_"):-len("_total")]
+            t = by_tenant.setdefault(labels["tenant"], {})
+            t[which] = t.get(which, 0.0) + value
+    if not by_tenant:
+        return
+    for tenant, c in sorted(by_tenant.items()):
+        adm = c.get("admitted", 0.0)
+        fin = c.get("finished", 0.0)
+        shed = c.get("shed", 0.0)
+        qshed = c.get("quota_shed", 0.0)
+        if fin + shed > adm + 1e-9:
+            _fail(f"tenant {tenant}: finished({fin:.0f}) + shed({shed:.0f})"
+                  f" > admitted({adm:.0f})", failures)
+        if qshed > shed + 1e-9:
+            _fail(f"tenant {tenant}: quota_shed({qshed:.0f}) > "
+                  f"shed({shed:.0f})", failures)
+    print(f"  tenants: {len(by_tenant)} classes "
+          f"({', '.join(sorted(by_tenant))}) consistent OK")
+
+
 def validate_dir(d: str) -> list:
     failures: list = []
     print(f"[validate_obs] {d}")
@@ -53,6 +83,7 @@ def validate_dir(d: str) -> list:
             else:
                 print(f"  metrics.prom: {n} samples, "
                       f"{len(parsed['types'])} metrics OK")
+                _check_tenants(parsed["samples"], failures)
         except ValueError as e:
             _fail(f"metrics.prom unparseable: {e}", failures)
 

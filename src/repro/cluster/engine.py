@@ -17,11 +17,23 @@ Autoscaling hooks in at event granularity: the ``Autoscaler`` watches the
 fleet's finished-request stream and queue depths, spawns replicas (with a
 cold-start delay) or gracefully drains them (no new traffic, retire when
 empty).
+
+Event selection is vectorized by default (DESIGN.md §13): a maintained
+numpy array caches every replica's next-event time and only replicas whose
+state actually changed (stepped, routed-to, handoff destination, retired,
+spawned) are re-peeked before an ``np.argmin`` pick.  The O(active) per-event
+python scan is retained behind ``vectorized=False`` as the equivalence
+baseline; both paths share the same arrival/step handlers, so results are
+identical.  ``profile=True`` attributes wall-clock event-loop time by phase
+(select / route / step / harvest / migrate / scale).
 """
 
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional, Tuple
+from time import perf_counter
+from typing import Callable, Dict, List, Optional, Set, Tuple
+
+import numpy as np
 
 from repro.cluster.autoscaler import Autoscaler
 from repro.cluster.router import Router
@@ -74,12 +86,21 @@ class Replica:
 class ClusterEngine:
     def __init__(self, replica_factory: Callable[[int], ServeEngine],
                  router: Router, n_replicas: int = 2,
-                 autoscaler: Optional[Autoscaler] = None, obs=None):
+                 autoscaler: Optional[Autoscaler] = None, obs=None,
+                 vectorized: bool = True, profile: bool = False):
         if n_replicas < 1:
             raise ValueError("a cluster needs at least one replica")
         self.replica_factory = replica_factory
         self.router = router
         self.autoscaler = autoscaler
+        self.vectorized = vectorized
+        self.profile_enabled = profile
+        # wall-clock seconds of event-loop time by phase, plus the number
+        # of selection decisions made ("events"); populated when
+        # profile=True, in both the vectorized and the legacy-scan path
+        self.profile: Dict[str, float] = {
+            "select": 0.0, "route": 0.0, "step": 0.0,
+            "harvest": 0.0, "migrate": 0.0, "scale": 0.0, "events": 0}
         # fleet-level registry (DESIGN.md §9); replica engines report into
         # per-replica labeled views of the same registry via the factory
         self.obs = obs if obs is not None else NULL
@@ -89,6 +110,14 @@ class ClusterEngine:
         self.replicas: List[Replica] = [
             Replica(i, replica_factory(i)) for i in range(n_replicas)]
         self._next_rid = n_replicas
+        # vectorized event selection state: cached next-event time per
+        # replica-list index (inf = no event / retired), the set of indices
+        # whose cache is stale, and rid -> list index.  List order is
+        # append-only and rid-monotonic, so np.argmin's first-min-index
+        # tie-break reproduces the legacy min((t, rid)) tie-break exactly.
+        self._peek = np.full(n_replicas, np.inf)
+        self._dirty: Set[int] = set(range(n_replicas))
+        self._idx: Dict[int, int] = {i: i for i in range(n_replicas)}
         self.now = 0.0                   # fleet clock (max event time seen)
         self.routed: Dict[int, int] = {rep.rid: 0 for rep in self.replicas}
         self.migrations = 0              # completed handoff_out dispatches
@@ -113,58 +142,126 @@ class ClusterEngine:
         (t, kind, obj) events.  Returns {replica_id: finished requests}."""
         it = iter(stream)
         nxt = next(it, None)
-        while True:
-            evs = [(rep.engine.peek_next_event(), rep.rid, rep)
-                   for rep in self._stepable()]
-            evs = [e for e in evs if e[0] is not None]
-            t_rep = min(evs)[0] if evs else None
-            if nxt is not None and (t_rep is None or nxt[0] <= t_rep):
-                t, kind, obj = nxt
-                nxt = next(it, None)
-                self.now = max(self.now, t)
-                self._maybe_scale(self.now)
-                rep = self.router.route(kind, obj, self.active(), t)
-                rep.engine.enqueue(kind, obj)
-                self.routed[rep.rid] = self.routed.get(rep.rid, 0) \
-                    + (1 if kind == "r" else len(obj[1]))
-                self.router.note_route(rep, kind, t)
-                if self.obs.enabled:
-                    # per-replica load snapshot at every routing instant —
-                    # the signal the router actually saw
-                    for rp in self.active():
-                        self.obs.gauge("cluster_queue_len",
-                                       "live+queued requests",
-                                       replica=rp.rid
-                                       ).set(rp.queue_len(), t=t)
-                        self.obs.gauge("cluster_kv_used_frac",
-                                       "replica KV pressure",
-                                       replica=rp.rid
-                                       ).set(rp.kv_used_frac(), t=t)
-                continue
-            if not evs:
-                break
-            _, _, rep = min(evs)
-            if not rep.engine.step_once():     # max_steps safety valve
-                rep.retired_at = rep.engine.now
-                continue
-            self.now = max(self.now, rep.engine.now)
-            self._harvest(rep)
-            self._maybe_migrate(rep)
-            if rep.draining and rep.engine.peek_next_event() is None:
-                rep.retired_at = rep.engine.now
+        if self.vectorized:
+            self._run_vectorized(it, nxt)
+        else:
+            self._run_scan(it, nxt)
         for rep in self.replicas:              # drain stragglers' stats
             self._harvest(rep)
         return {rep.rid: rep.engine.finished for rep in self.replicas}
 
+    def _run_vectorized(self, it, nxt) -> None:
+        """Event loop with cached next-event times: only dirty replicas are
+        re-peeked, selection is a single np.argmin over the fleet."""
+        prof, pr = self.profile_enabled, self.profile
+        self._dirty.update(range(len(self.replicas)))
+        while True:
+            t0 = perf_counter() if prof else 0.0
+            if self._dirty:
+                peek = self._peek
+                for i in self._dirty:
+                    rep = self.replicas[i]
+                    if rep.retired_at is not None:
+                        peek[i] = np.inf
+                    else:
+                        tn = rep.engine.peek_next_event()
+                        peek[i] = np.inf if tn is None else tn
+                self._dirty.clear()
+            i_min = int(np.argmin(self._peek))
+            t_min = float(self._peek[i_min])
+            t_rep = None if t_min == np.inf else t_min
+            if prof:
+                pr["select"] += perf_counter() - t0
+                pr["events"] += 1
+            if nxt is not None and (t_rep is None or nxt[0] <= t_rep):
+                self._route_arrival(nxt)
+                nxt = next(it, None)
+                continue
+            if t_rep is None:
+                break
+            rep = self.replicas[i_min]
+            self._dirty.add(i_min)
+            self._step_replica(rep)
+
+    def _run_scan(self, it, nxt) -> None:
+        """Legacy O(active) per-event python scan — kept as the equivalence
+        baseline for the vectorized loop (and its speedup microbench)."""
+        prof, pr = self.profile_enabled, self.profile
+        while True:
+            t0 = perf_counter() if prof else 0.0
+            evs = [(rep.engine.peek_next_event(), rep.rid, rep)
+                   for rep in self._stepable()]
+            evs = [e for e in evs if e[0] is not None]
+            t_rep = min(evs)[0] if evs else None
+            rep = min(evs)[2] if evs else None
+            if prof:
+                pr["select"] += perf_counter() - t0
+                pr["events"] += 1
+            if nxt is not None and (t_rep is None or nxt[0] <= t_rep):
+                self._route_arrival(nxt)
+                nxt = next(it, None)
+                continue
+            if rep is None:
+                break
+            self._step_replica(rep)
+
+    def _route_arrival(self, nxt) -> None:
+        t, kind, obj = nxt
+        self.now = max(self.now, t)
+        self._maybe_scale(self.now)
+        prof = self.profile_enabled
+        t0 = perf_counter() if prof else 0.0
+        rep = self.router.route(kind, obj, self.active(), t)
+        rep.engine.enqueue(kind, obj)
+        self._dirty.add(self._idx[rep.rid])
+        self.routed[rep.rid] = self.routed.get(rep.rid, 0) \
+            + (1 if kind == "r" else len(obj[1]))
+        self.router.note_route(rep, kind, t)
+        if self.obs.enabled:
+            # per-replica load snapshot at every routing instant —
+            # the signal the router actually saw
+            for rp in self.active():
+                self.obs.gauge("cluster_queue_len",
+                               "live+queued requests",
+                               replica=rp.rid
+                               ).set(rp.queue_len(), t=t)
+                self.obs.gauge("cluster_kv_used_frac",
+                               "replica KV pressure",
+                               replica=rp.rid
+                               ).set(rp.kv_used_frac(), t=t)
+        if prof:
+            self.profile["route"] += perf_counter() - t0
+
+    def _step_replica(self, rep: Replica) -> None:
+        prof = self.profile_enabled
+        t0 = perf_counter() if prof else 0.0
+        ok = rep.engine.step_once()
+        if prof:
+            self.profile["step"] += perf_counter() - t0
+        if not ok:                             # max_steps safety valve
+            rep.retired_at = rep.engine.now
+            self._dirty.add(self._idx[rep.rid])
+            return
+        self.now = max(self.now, rep.engine.now)
+        self._harvest(rep)
+        self._maybe_migrate(rep)
+        if rep.draining and rep.engine.peek_next_event() is None:
+            rep.retired_at = rep.engine.now
+            self._dirty.add(self._idx[rep.rid])
+
     # ------------------------------------------------------------------
     def _harvest(self, rep: Replica) -> None:
+        prof = self.profile_enabled
+        t0 = perf_counter() if prof else 0.0
         new = rep.engine.finished[rep._fin_cursor:]
-        if not new:
-            return
-        rep._fin_cursor = len(rep.engine.finished)
-        if self.autoscaler is not None:
-            for r in new:
-                self.autoscaler.observe_finish(r, r.finish_t)
+        if new:
+            rep._fin_cursor = len(rep.engine.finished)
+            if self.autoscaler is not None:
+                for r in new:
+                    self.autoscaler.observe_finish(r, r.finish_t)
+        if prof:
+            self.profile["harvest"] += perf_counter() - t0
+        if new and self.autoscaler is not None:
             self._maybe_scale(self.now)
 
     # ------------------------------------------------------------------
@@ -180,53 +277,60 @@ class ClusterEngine:
         chooser = getattr(self.router, "choose_decode_target", None)
         if chooser is None:
             return          # role-unaware router: roles are routing-only
+        prof = self.profile_enabled
+        t0 = perf_counter() if prof else 0.0
         act = self.active()
-        if len(act) < 2:
-            return
-        eng = rep.engine
-        cands = [r for r in eng.requests.values()
-                 if r.state != ReqState.FINISHED and not r.done
-                 and r.dag_id is None and r.decoded == 0
-                 and r.prefill_remaining == 0]
-        for r in cands:
-            a = eng.kv.seqs.get(r.rid)
-            if a is None or a.swapped:
-                continue
-            t_xfer = eng.backend.migrate_time(
-                a.tokens * eng.kv.kv_bytes_per_token)
-            dst = chooser(r, rep, act, eng.now, t_xfer)
-            if dst is None or dst is rep:
-                continue
-            out = eng.handoff_out(r.rid)
-            if out is None:
-                continue
-            req, pkg = out
-            arrive = eng.now + t_xfer
-            if eng.tracer.enabled:
-                eng.tracer.event("transfer", req.rid, eng.now, rep.rid,
-                                 dst=dst.rid, bytes=int(pkg["bytes"]),
-                                 eta=round(arrive, 6))
-            dst.engine.enqueue_handoff(req, pkg, arrive)
-            self.migrations += 1
-            self.obs.counter("cluster_migrations_total",
-                             "prefill->decode KV handoffs",
-                             src=rep.rid, dst=dst.rid).inc(t=eng.now)
+        if len(act) >= 2:
+            eng = rep.engine
+            cands = [r for r in eng.requests.values()
+                     if r.state != ReqState.FINISHED and not r.done
+                     and r.dag_id is None and r.decoded == 0
+                     and r.prefill_remaining == 0]
+            for r in cands:
+                a = eng.kv.seqs.get(r.rid)
+                if a is None or a.swapped:
+                    continue
+                t_xfer = eng.backend.migrate_time(
+                    a.tokens * eng.kv.kv_bytes_per_token)
+                dst = chooser(r, rep, act, eng.now, t_xfer)
+                if dst is None or dst is rep:
+                    continue
+                out = eng.handoff_out(r.rid)
+                if out is None:
+                    continue
+                req, pkg = out
+                arrive = eng.now + t_xfer
+                if eng.tracer.enabled:
+                    eng.tracer.event("transfer", req.rid, eng.now, rep.rid,
+                                     dst=dst.rid, bytes=int(pkg["bytes"]),
+                                     eta=round(arrive, 6))
+                dst.engine.enqueue_handoff(req, pkg, arrive)
+                self._dirty.add(self._idx[dst.rid])
+                self.migrations += 1
+                self.obs.counter("cluster_migrations_total",
+                                 "prefill->decode KV handoffs",
+                                 src=rep.rid, dst=dst.rid).inc(t=eng.now)
+        if prof:
+            self.profile["migrate"] += perf_counter() - t0
 
     def _maybe_scale(self, t: float) -> None:
         if self.autoscaler is None:
             return
+        prof = self.profile_enabled
+        t0 = perf_counter() if prof else 0.0
         act = self.active()
-        if not act:
-            return
-        mean_queue = sum(rep.queue_len() for rep in act) / len(act)
-        d = self.autoscaler.decide(t, len(act), mean_queue,
-                                   act[0].engine.cfg.max_batch)
-        if d > 0:
-            self._spawn(t)
-        elif d < 0:
-            self._drain(t, act)
-        else:
-            self._maybe_flip_role(t, act)
+        if act:
+            mean_queue = sum(rep.queue_len() for rep in act) / len(act)
+            d = self.autoscaler.decide(t, len(act), mean_queue,
+                                       act[0].engine.cfg.max_batch)
+            if d > 0:
+                self._spawn(t)
+            elif d < 0:
+                self._drain(t, act)
+            else:
+                self._maybe_flip_role(t, act)
+        if prof:
+            self.profile["scale"] += perf_counter() - t0
 
     def _role_loads(self, act: List[Replica]) -> Tuple[float, float]:
         """Per-role backlog in STEP-EQUIVALENTS per capable replica:
@@ -278,6 +382,9 @@ class ClusterEngine:
         eng.now = t + self.autoscaler.cfg.cold_start_s
         rep = Replica(rid, eng, spawned_at=t)
         self.replicas.append(rep)
+        self._idx[rid] = len(self.replicas) - 1
+        self._peek = np.append(self._peek, np.inf)
+        self._dirty.add(self._idx[rid])
         self.routed[rid] = 0
         self.replica_timeline.append((t, len(self.active())))
         self.obs.gauge("cluster_active_replicas", "active fleet size"
@@ -289,6 +396,7 @@ class ClusterEngine:
         rep.draining = True
         if rep.engine.peek_next_event() is None:
             rep.retired_at = t
+            self._dirty.add(self._idx[rep.rid])
         self.replica_timeline.append((t, len(self.active())))
         self.obs.gauge("cluster_active_replicas", "active fleet size"
                        ).set(len(self.active()), t=t)

@@ -412,6 +412,37 @@ class DisaggRouter(SLOMarginRouter):
         return best
 
 
+# ---------------------------------------------------------------------------
+class TenantWeightedRouter(SLOMarginRouter):
+    """slo-margin with multi-tenant SLO classes priced in (DESIGN.md §13).
+
+    Every margin-burn estimate — the arriving request's own shortfall AND
+    the degradation admitting it inflicts on live deadline work — is
+    multiplied by the request's tenant fairness weight
+    (``meta['tenant_weight']``, from workload.TENANT_WEIGHT).  The fleet
+    therefore optimises *weighted* goodput: an enterprise stream's margin
+    is worth 4× a free stream's, so enterprise arrivals claim the replica
+    that genuinely protects their SLO while free traffic is placed mostly
+    by expected wait, and replicas holding enterprise backlogs repel
+    low-value load first.  Untenanted requests weigh 1.0, so on an
+    untenanted workload this routes identically to slo-margin."""
+
+    name = "tenant"
+
+    def _shortfall(self, req: Request, est_ttlt: float) -> float:
+        w = float(req.meta.get("tenant_weight", 1.0))
+        return w * super()._shortfall(req, est_ttlt)
+
+    def route(self, kind: str, obj, replicas: List, now: float):
+        rep = super().route(kind, obj, replicas, now)
+        r0 = self.item_requests(kind, obj)[0]
+        if r0.tenant:
+            self.obs.counter("router_tenant_routed_total",
+                             "arrivals routed, by tenant class",
+                             tenant=r0.tenant).inc(t=now)
+        return rep
+
+
 ROUTERS = {
     "round-robin": RoundRobinRouter,
     "jsq": JoinShortestQueueRouter,
@@ -419,6 +450,7 @@ ROUTERS = {
     "slo-margin": SLOMarginRouter,
     "prefix-affinity": PrefixAffinityRouter,
     "disagg": DisaggRouter,
+    "tenant": TenantWeightedRouter,
 }
 
 

@@ -48,6 +48,7 @@ instead of re-deriving per-request slack from raw engine state.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.scheduler import (AnalyzedSchedulerBase, Decision,
@@ -519,6 +520,42 @@ class GroupedMarginScheduler(AnalyzedSchedulerBase):
                         shed.append(r.rid)
                         self._dirty = True
                         n_shed_prefill += 1
+            # 4b) weighted-fairness relief (multi-tenant fleets, DESIGN.md
+            #     §13): if the pool is still deeply pressured after the
+            #     hopeless sheds, drop LATE singles of over-share tenants —
+            #     lowest fairness weight first, largest context first — but
+            #     never push a tenant below its weight-proportional share
+            #     of the live tenanted work (the starved-tenant invariant).
+            #     Untenanted runs never enter: no request carries a tenant.
+            n_shed_fair = 0
+            if view.kv_free_frac < 0.5 * self.kv_shed_frac:
+                live_n: Dict[str, int] = {}
+                live_w: Dict[str, float] = {}
+                for r in reqs:
+                    if r.tenant and r.rid not in shed:
+                        live_n[r.tenant] = live_n.get(r.tenant, 0) + 1
+                        live_w[r.tenant] = float(
+                            r.meta.get("tenant_weight", 1.0))
+                if live_n:
+                    tot_n = sum(live_n.values())
+                    tot_w = sum(live_w.values()) or 1.0
+                    over = {t: live_n[t]
+                            - math.ceil(tot_n * live_w[t] / tot_w)
+                            for t in live_n}
+                    cands = [r for r in by_group["late"]
+                             if r.tenant and r.dag_id is None
+                             and r.slo.kind not in ("none", "collective")
+                             and r.rid not in shed]
+                    cands.sort(key=lambda r: (
+                        float(r.meta.get("tenant_weight", 1.0)),
+                        -(r.prompt_len + r.decoded), r.rid))
+                    for r in cands:
+                        if over.get(r.tenant, 0) <= 0:
+                            continue
+                        shed.append(r.rid)
+                        over[r.tenant] -= 1
+                        self._dirty = True
+                        n_shed_fair += 1
             if n_shed_decode:
                 self.obs.counter("sched_shed_total",
                                  "sheds by reason",
@@ -528,6 +565,10 @@ class GroupedMarginScheduler(AnalyzedSchedulerBase):
                 self.obs.counter("sched_shed_total", "sheds by reason",
                                  reason="hopeless_prefill"
                                  ).inc(n_shed_prefill, t=now)
+            if n_shed_fair:
+                self.obs.counter("sched_shed_total", "sheds by reason",
+                                 reason="tenant_fairness"
+                                 ).inc(n_shed_fair, t=now)
         shed_set = set(shed)
         if shed_set:
             decode_ids = [rid for rid in decode_ids if rid not in shed_set]

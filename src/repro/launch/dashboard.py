@@ -6,6 +6,8 @@ a ``dump_all`` metrics directory (``metrics.json`` + ``summary.json``):
   * headline stats (goodput, gain fraction, deferrals, quanta, residuals);
   * goodput timeline — fleet SLO attainment when the autoscaler ran, else
     cumulative finished requests per replica;
+  * per-tenant lifecycle (free/pro/enterprise): cumulative finished per
+    class plus an admitted/finished/shed census table (tenant runs only);
   * margin-group census as a stacked area over quanta refreshes;
   * per-replica KV pressure;
   * TTFT / TPOT percentiles per SLO class (bucket-interpolated).
@@ -32,6 +34,9 @@ _GROUP_ORDER = ("hopeless", "late", "critical", "ontrack", "slack", "ahead")
 _GROUP_COLOR = {"hopeless": "var(--c1)", "late": "var(--c3)",
                 "critical": "var(--c4)", "ontrack": "var(--c2)",
                 "slack": "var(--c0)", "ahead": "var(--ink3)"}
+_TENANT_ORDER = ("free", "pro", "enterprise")
+_TENANT_COLOR = {"free": "var(--c0)", "pro": "var(--c2)",
+                 "enterprise": "var(--c3)"}
 
 _CSS = """
 :root, [data-theme=light] {
@@ -267,6 +272,45 @@ def render_report(snap: Dict, summary: Optional[Dict] = None,
             ["series", "t (s)", "finished"],
             [[l, f"{t:.2f}", f"{v:.0f}"]
              for l, _, s in named for t, v in s]))
+
+    # -- per-tenant lifecycle -------------------------------------------
+    tenant_counts: Dict[str, Dict[str, float]] = {}
+    tenant_series: Dict[str, List[List[List[float]]]] = {}
+    for which in ("admitted", "finished", "shed", "quota_shed"):
+        for r in _recs(snap, f"engine_tenant_{which}_total"):
+            tenant = r["labels"].get("tenant", "?")
+            final = r["series"][-1][1] if r["series"] else 0.0
+            c = tenant_counts.setdefault(tenant, {})
+            c[which] = c.get(which, 0.0) + final
+            if which == "finished" and r["series"]:
+                tenant_series.setdefault(tenant, []).append(r["series"])
+    if tenant_counts:
+        parts.append("<h2>Per-tenant lifecycle</h2>")
+        order = [t for t in _TENANT_ORDER if t in tenant_counts] \
+            + sorted(set(tenant_counts) - set(_TENANT_ORDER))
+        named = []
+        for i, tenant in enumerate(order):
+            if tenant not in tenant_series:
+                continue
+            grid = sorted({t for s in tenant_series[tenant] for t, _ in s})
+            merged = [sum(col) for col in
+                      zip(*(_step_resample(s, grid)
+                            for s in tenant_series[tenant]))]
+            color = _TENANT_COLOR.get(
+                tenant, f"var(--c{i % _N_SLOTS})")
+            named.append((f"{tenant} finished", color,
+                          [[t, v] for t, v in zip(grid, merged)]))
+        if named:
+            parts.append(_line_chart(named))
+            parts.append(_legend([(l, c) for l, c, _ in named]))
+        parts.append(_table(
+            ["tenant", "admitted", "finished", "shed", "quota shed",
+             "finish frac"],
+            [[t, f"{c.get('admitted', 0):.0f}", f"{c.get('finished', 0):.0f}",
+              f"{c.get('shed', 0):.0f}", f"{c.get('quota_shed', 0):.0f}",
+              _fmt(c.get("finished", 0.0) / c["admitted"], 3)
+              if c.get("admitted") else "–"]
+             for t, c in ((t, tenant_counts[t]) for t in order)]))
 
     # -- margin-group stacked area --------------------------------------
     parts.append("<h2>Margin-group census (per quanta refresh)</h2>")

@@ -88,15 +88,15 @@ def main() -> None:
 
     if args.real:
         # same engine/scheduler stack, real paged-KV execution
-        from repro.serving.run import run_experiment
+        from repro.serving.run import BackendSpec, ExperimentSpec, run
         spec = WorkloadSpec(rate=1.0, duration=5.0, seed=args.seed,
                             prompt_cap=48, output_cap=24, slo_scale=20.0)
-        s = run_experiment(args.scheduler, spec=spec, service=service,
-                           engine_cfg=EngineConfig(max_batch=8,
-                                                   prefill_budget=48),
-                           backend="jax",
-                           backend_kwargs=dict(num_blocks=64, page=16,
-                                               max_len=96, seed=args.seed))
+        s = run(ExperimentSpec(
+            scheduler=args.scheduler, workload=spec, service=service,
+            engine=EngineConfig(max_batch=8, prefill_budget=48),
+            backend=BackendSpec(kind="jax",
+                                kwargs=dict(num_blocks=64, page=16,
+                                            max_len=96, seed=args.seed))))
         print(json.dumps(s.row()))
         return
 
@@ -106,8 +106,9 @@ def main() -> None:
         print(json.dumps({**s.row(), **info}))
         return
 
-    from repro.serving.run import run_experiment
-    s = run_experiment(args.scheduler, spec=spec, service=service)
+    from repro.serving.run import ExperimentSpec, run
+    s = run(ExperimentSpec(scheduler=args.scheduler, workload=spec,
+                           service=service))
     print(json.dumps(s.row()))
     for k, v in s.per_type.items():
         print(k, json.dumps({kk: round(vv, 4) for kk, vv in v.items()}))

@@ -311,7 +311,7 @@ class SimBackend(Backend):
         t = self.overhead
         if prefill_tokens:
             t += 2.0 * self.n_params * prefill_tokens / self.flops
-        if decode_ctxs:
+        if len(decode_ctxs):               # list or ndarray
             weights = 2.0 * self.n_params / self.bw
             kv = sum(decode_ctxs) * self.kv_bytes / self.bw
             t += weights + kv
@@ -320,6 +320,30 @@ class SimBackend(Backend):
             # tokens: the weights are already resident for the decode
             # pass, verification just widens the matmuls
             t += 2.0 * self.n_params * verify_tokens / self.flops
+        return t
+
+    def step_time_batch(self, prefill_tokens, decode_ctx_sums,
+                        decode_lane_counts, verify_tokens=None) -> np.ndarray:
+        """Price M steps in ONE numpy pass — elementwise identical to M
+        ``step_time`` calls (fleet-sweep hot path, DESIGN.md §13).
+
+        ``prefill_tokens[i]``: prompt tokens computed in step i;
+        ``decode_ctx_sums[i]``: sum of full context lengths over step i's
+        decode lanes; ``decode_lane_counts[i]``: how many decode lanes
+        (gates the weight-read term exactly like a non-empty ctx list);
+        ``verify_tokens[i]``: extra drafted positions scored."""
+        pf = np.asarray(prefill_tokens, dtype=np.float64)
+        kv = np.asarray(decode_ctx_sums, dtype=np.float64)
+        ln = np.asarray(decode_lane_counts, dtype=np.float64)
+        t = np.full(pf.shape, float(self.overhead))
+        t += np.where(pf > 0, 2.0 * self.n_params * pf / self.flops, 0.0)
+        t += np.where(ln > 0,
+                      2.0 * self.n_params / self.bw
+                      + kv * self.kv_bytes / self.bw, 0.0)
+        if verify_tokens is not None:
+            vt = np.asarray(verify_tokens, dtype=np.float64)
+            t += np.where(vt > 0,
+                          2.0 * self.n_params * vt / self.flops, 0.0)
         return t
 
     @classmethod

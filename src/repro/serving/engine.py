@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -84,6 +85,15 @@ class EngineConfig:
     # the autoscaler may flip a mixed replica's role under sustained
     # role imbalance.
     role: str = "mixed"          # "prefill" | "decode" | "mixed"
+    # multi-tenant admission quota (fleet scale-out, DESIGN.md §13): cap
+    # on a tenant's LIVE (admitted, unfinished) singles per unit of
+    # fairness weight — tenant cap = ceil(tenant_quota × weight), with
+    # weight from meta['tenant_weight'] (workload.TENANT_WEIGHT).  An
+    # over-quota single is shed at admission and counts as an SLO miss in
+    # the honest denominator.  0 disables admission control; untenanted
+    # requests and DAG members are never admission-shed (collective
+    # stages must complete once started).
+    tenant_quota: int = 0
 
 
 class ServeEngine:
@@ -162,6 +172,10 @@ class ServeEngine:
         # replica handed off after prefill / landed for decode
         self.migrated_out = 0
         self.migrated_in = 0
+        # per-tenant live counts (admitted, unfinished) maintained
+        # incrementally — the admission-quota check must stay O(1) at
+        # fleet scale.  "" (untenanted) is never tracked.
+        self.tenant_live: Dict[str, int] = {}
         self._pending: List[Tuple[float, int, object]] = []
         # in-flight migrations addressed to this replica: (arrive_t, seq,
         # Request, payload pkg).  Kept separate from _pending — routers
@@ -241,6 +255,25 @@ class ServeEngine:
                            "mean time per output token at finish",
                            buckets=tb, slo=k)
             for k in ("latency", "throughput", "collective", "none")}
+        # per-tenant lifecycle counters, created lazily on first use so
+        # untenanted runs register no extra series
+        self._tenant_ins: Dict[Tuple[str, str], object] = {}
+
+    _TENANT_HELP = {
+        "admitted": "requests admitted, by tenant class",
+        "finished": "requests finished, by tenant class",
+        "shed": "requests shed (scheduler or admission quota), by tenant",
+        "quota_shed": "requests rejected by the admission quota, by tenant",
+    }
+
+    def _m_tenant(self, which: str, tenant: str):
+        key = (which, tenant)
+        ins = self._tenant_ins.get(key)
+        if ins is None:
+            ins = self.obs.counter(f"engine_tenant_{which}_total",
+                                   self._TENANT_HELP[which], tenant=tenant)
+            self._tenant_ins[key] = ins
+        return ins
 
     # ------------------------------------------------------------------
     def load(self, singles: List[Request],
@@ -262,13 +295,49 @@ class ServeEngine:
     def _tracker(self):
         return getattr(self.sched, "tracker", None)
 
+    def _quota_reject(self, req: Request) -> bool:
+        """Admission-quota check (O(1)): a tenanted single over its live
+        cap is rejected under admission control.  DAG members pass — a
+        collective's stages must complete once stage 0 is admitted."""
+        q = self.cfg.tenant_quota
+        if not q or not req.tenant or req.dag_id is not None:
+            return False
+        cap = math.ceil(q * float(req.meta.get("tenant_weight", 1.0)))
+        return self.tenant_live.get(req.tenant, 0) >= max(cap, 1)
+
+    def _tenant_done(self, r: Request, shed: bool = False) -> None:
+        if not r.tenant:
+            return
+        n = self.tenant_live.get(r.tenant, 0) - 1
+        self.tenant_live[r.tenant] = max(n, 0)
+        self._m_tenant("shed" if shed else "finished", r.tenant).inc(
+            t=self.now)
+
     def _admit(self, req: Request):
         self.requests[req.rid] = req
         self._m_admit.inc(t=self.now)
+        if req.tenant:
+            self._m_tenant("admitted", req.tenant).inc(t=self.now)
         if self._trace:
             self.tracer.event("admit", req.rid, self.now, self.replica,
                               slo=req.slo.kind, prompt_len=req.prompt_len,
                               arrival=round(req.arrival, 6))
+        if self._quota_reject(req):
+            # lifecycle over before scheduling: no KV was touched, the
+            # scheduler never sees it, and the honest denominator still
+            # counts it (requests dict + shed list -> SLO miss)
+            req.state = ReqState.FINISHED
+            self.shed.append(req)
+            self._m_shed_c.inc(t=self.now)
+            self._m_tenant("shed", req.tenant).inc(t=self.now)
+            self._m_tenant("quota_shed", req.tenant).inc(t=self.now)
+            if self._trace:
+                self.tracer.event("shed", req.rid, self.now, self.replica,
+                                  prefilled=0, decoded=0, reason="quota")
+            return
+        if req.tenant:
+            self.tenant_live[req.tenant] = \
+                self.tenant_live.get(req.tenant, 0) + 1
         if self.cfg.prefix_cache:
             self._prefix_lookup(req)
         view = self._view()
@@ -395,6 +464,29 @@ class ServeEngine:
                 n += sum(dag.stage_sizes[dag.cur_stage + 1:])
         return n
 
+    def tenant_submitted(self) -> Dict[str, int]:
+        """Per-tenant slice of ``submitted_count`` ("" = untenanted) —
+        the honest per-tenant goodput denominators."""
+        n: Dict[str, int] = {}
+
+        def add(tenant: str, k: int = 1) -> None:
+            n[tenant] = n.get(tenant, 0) + k
+
+        for r in self.requests.values():
+            add(r.tenant)
+        for _, _, r, _ in self._inbound:
+            add(r.tenant)
+        for kind, obj in self.pending_items():
+            if kind == "r":
+                add(obj.tenant)
+            else:
+                dag, reqs = obj
+                add(dag.tenant, len(reqs) + sum(dag.stage_sizes[1:]))
+        for dag in self.dags.values():
+            if not dag.finished:
+                add(dag.tenant, sum(dag.stage_sizes[dag.cur_stage + 1:]))
+        return n
+
     def _next_arrival_t(self) -> Optional[float]:
         """Earliest queued event — a workload arrival or an in-flight
         migration landing — or None when both queues are empty."""
@@ -516,6 +608,9 @@ class ServeEngine:
         self.backend.kv_release(rid)
         del self.requests[rid]
         r.state = ReqState.WAITING
+        if r.tenant:   # leaves this replica's live set (lands on dst's)
+            self.tenant_live[r.tenant] = max(
+                self.tenant_live.get(r.tenant, 0) - 1, 0)
         self.migrated_out += 1
         self._m_migrated_out.inc(t=self.now)
         if self._trace:
@@ -539,6 +634,9 @@ class ServeEngine:
         req.state = ReqState.WAITING
         req.meta["migrated"] = True
         self.requests[rid] = req
+        if req.tenant:
+            self.tenant_live[req.tenant] = \
+                self.tenant_live.get(req.tenant, 0) + 1
         self.migrated_in += 1
         self._m_migrated_in.inc(t=self.now)
         ok = self.kv.adopt(rid, n_pages, n_tok)
@@ -701,6 +799,7 @@ class ServeEngine:
             self.backend.kv_release(rid)
             self.shed.append(r)
             self._m_shed_c.inc(t=self.now)
+            self._tenant_done(r, shed=True)
             if self._trace:
                 self.tracer.event("shed", rid, self.now, self.replica,
                                   prefilled=r.prefilled, decoded=r.decoded)
@@ -833,6 +932,7 @@ class ServeEngine:
                 self.finished.append(r)
                 finished_now.append(r)
                 self._m_finished.inc(t=self.now)
+                self._tenant_done(r)
                 if r.decoded > 1 and r.first_token_t is not None:
                     self._m_tpot[r.slo.kind].observe(
                         (self.now - r.first_token_t) / (r.decoded - 1),
@@ -984,6 +1084,7 @@ class ServeEngine:
                     self.finished.append(r)
                     finished_now.append(r)
                     self._m_finished.inc(t=self.now)
+                    self._tenant_done(r)
                     if r.decoded > 1 and r.first_token_t is not None:
                         self._m_tpot[r.slo.kind].observe(
                             (self.now - r.first_token_t) / (r.decoded - 1),
@@ -1096,6 +1197,7 @@ class ServeEngine:
                     self.finished.append(r)
                     finished_now.append(r)
                     self._m_finished.inc(t=self.now)
+                    self._tenant_done(r)
                     if r.decoded > 1 and r.first_token_t is not None:
                         self._m_tpot[r.slo.kind].observe(
                             (self.now - r.first_token_t) / (r.decoded - 1),

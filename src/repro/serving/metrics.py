@@ -76,6 +76,12 @@ class Summary:
     # prompt — these counters make the flow auditable per replica
     migrated_in: int = 0
     migrated_out: int = 0
+    # multi-tenant SLO classes (DESIGN.md §13): per-tenant goodput /
+    # attainment breakdown, keyed by tenant class.  Empty for untenanted
+    # workloads.  Denominators are honest per-tenant submitted counts
+    # (quota-shed and never-finished requests count as misses).
+    per_tenant: Dict[str, Dict[str, float]] = \
+        dataclasses.field(default_factory=dict)
 
     @property
     def accept_rate(self) -> float:
@@ -93,7 +99,7 @@ class Summary:
             / max(self.cached_tokens + self.prefill_tokens, 1)
 
     def row(self) -> Dict[str, float]:
-        return dict(scheduler=self.scheduler, n=self.n_finished,
+        r = dict(scheduler=self.scheduler, n=self.n_finished,
                     n_admitted=self.n_admitted,
                     n_unfinished=self.n_unfinished, n_shed=self.n_shed,
                     service_gain=round(self.service_gain, 1),
@@ -113,6 +119,9 @@ class Summary:
                     accept_rate=round(self.accept_rate, 4),
                     migrated_in=self.migrated_in,
                     migrated_out=self.migrated_out)
+        if self.per_tenant:
+            r["per_tenant"] = self.per_tenant
+        return r
 
 
 def summarize(name: str, finished: List[Request], service: ServiceModel,
@@ -125,7 +134,8 @@ def summarize(name: str, finished: List[Request], service: ServiceModel,
               deferrals: int = 0, quanta: int = 0,
               cost_residuals: Optional[Sequence[float]] = None,
               spec_proposed: int = 0, spec_accepted: int = 0,
-              migrated_in: int = 0, migrated_out: int = 0) -> Summary:
+              migrated_in: int = 0, migrated_out: int = 0,
+              tenant_admitted: Optional[Dict[str, int]] = None) -> Summary:
     """Aggregate a run.  ``n_admitted`` is the count of requests the
     engine(s) admitted — shed and never-finished requests are (n_admitted
     − n_finished) and count as SLO misses in ``goodput_frac``.  Omitting
@@ -167,6 +177,26 @@ def summarize(name: str, finished: List[Request], service: ServiceModel,
             slo_met=len([r for r in rs if service.slo_met(r)]) / len(rs),
         )
 
+    # per-tenant goodput/attainment (empty for untenanted workloads).
+    # slo_met mirrors per_type (attainment over the served population);
+    # goodput_frac uses the honest per-tenant submitted denominator when
+    # the engine provided one.
+    per_tenant: Dict[str, Dict[str, float]] = {}
+    t_adm = {k: v for k, v in (tenant_admitted or {}).items() if k}
+    for tn in sorted({r.tenant for r in served if r.tenant} | set(t_adm)):
+        fin_t = [r for r in finished if r.tenant == tn]
+        shed_t = [r for r in shed if r.tenant == tn]
+        rs = fin_t + shed_t
+        met_t = len([r for r in fin_t if service.slo_met(r)])
+        maxg_t = sum(service.max_gain(r) for r in rs)
+        gain_t = sum(service.realized_gain(r) for r in rs)
+        adm_t = max(t_adm.get(tn, 0), len(rs))
+        per_tenant[tn] = dict(
+            n=len(fin_t), n_shed=len(shed_t), n_admitted=adm_t,
+            slo_met=round(met_t / max(len(rs), 1), 4),
+            goodput_frac=round(met_t / max(adm_t, 1), 4),
+            gain_frac=round(gain_t / max(maxg_t, 1e-9), 4))
+
     nb = int(mk // bucket) + 1
     timeline = [0.0] * nb
     for r in finished:
@@ -188,7 +218,8 @@ def summarize(name: str, finished: List[Request], service: ServiceModel,
         cost_residual_p50=_pctl(resid_abs, 50),
         cost_residual_p95=_pctl(resid_abs, 95),
         spec_proposed=spec_proposed, spec_accepted=spec_accepted,
-        migrated_in=migrated_in, migrated_out=migrated_out)
+        migrated_in=migrated_in, migrated_out=migrated_out,
+        per_tenant=per_tenant)
 
 
 # ---------------------------------------------------------------------------
@@ -201,6 +232,9 @@ class FleetSummary:
     per_replica: Dict[int, Summary]
     replica_timeline: List[Tuple[float, int]]   # (t, n_active) on change
     routed: Dict[int, int]                      # requests routed per replica
+    # event-loop wall-time by phase (select/route/step/...) when the
+    # cluster ran with profile=True; None otherwise (DESIGN.md §13)
+    profile: Optional[Dict[str, float]] = None
 
     @property
     def goodput_frac(self) -> float:
@@ -238,7 +272,9 @@ def summarize_fleet(router: str, scheduler: str,
                     spec_by_replica: Optional[
                         Dict[int, Tuple[int, int]]] = None,
                     migrated_by_replica: Optional[
-                        Dict[int, Tuple[int, int]]] = None
+                        Dict[int, Tuple[int, int]]] = None,
+                    tenants_by_replica: Optional[
+                        Dict[int, Dict[str, int]]] = None
                     ) -> FleetSummary:
     all_fin: List[Request] = [r for fin in finished_by_replica.values()
                               for r in fin]
@@ -254,6 +290,11 @@ def summarize_fleet(router: str, scheduler: str,
     rsd = residuals_by_replica or {}
     spc = spec_by_replica or {}
     mig = migrated_by_replica or {}
+    tnt = tenants_by_replica or {}
+    tnt_fleet: Dict[str, int] = {}
+    for d in tnt.values():
+        for k, v in d.items():
+            tnt_fleet[k] = tnt_fleet.get(k, 0) + v
     all_resid: List[float] = [x for rs in rsd.values() for x in rs]
     all_shed: List[Request] = [r for s in shd.values() for r in s]
     fleet = summarize(f"{scheduler}@{router}", all_fin, service, makespan,
@@ -267,7 +308,8 @@ def summarize_fleet(router: str, scheduler: str,
                       spec_proposed=sum(v[0] for v in spc.values()),
                       spec_accepted=sum(v[1] for v in spc.values()),
                       migrated_in=sum(v[0] for v in mig.values()),
-                      migrated_out=sum(v[1] for v in mig.values()))
+                      migrated_out=sum(v[1] for v in mig.values()),
+                      tenant_admitted=tnt_fleet or None)
     pbr = preempt_by_replica or {}
     per_replica = {
         rid: summarize(f"{scheduler}@{router}/r{rid}", fin, service,
@@ -280,6 +322,7 @@ def summarize_fleet(router: str, scheduler: str,
                        spec_accepted=spc.get(rid, (0, 0))[1],
                        migrated_in=mig.get(rid, (0, 0))[0],
                        migrated_out=mig.get(rid, (0, 0))[1],
+                       tenant_admitted=tnt.get(rid),
                        **dict(zip(("prefill_tokens", "cached_tokens",
                                    "prefix_hits", "prefix_lookups"),
                                   pfx.get(rid, (0, 0, 0, 0)))))

@@ -49,6 +49,10 @@ class Request:
     # agentic chain share a token-stream prefix; meta['prompt_tokens']
     # carries the actual tokens the hash chain (and the jax backend) use
     session_id: Optional[int] = None
+    # multi-tenant SLO class ("" = untenanted; free | pro | enterprise by
+    # default, see workload.TENANT_CLASSES).  Weighted-fairness shedding
+    # reads meta['tenant_weight'] so schedulers stay config-free.
+    tenant: str = ""
     # --- runtime state (engine-owned) ---
     state: ReqState = ReqState.WAITING
     cached_len: int = 0            # prompt tokens served from prefix cache
@@ -124,6 +128,7 @@ class CollectiveDag:
     cur_stage: int = 0
     finished: bool = False
     finish_t: Optional[float] = None
+    tenant: str = ""               # inherited by every member request
 
     @property
     def deadline(self) -> float:

@@ -1,17 +1,26 @@
-"""One-call experiment runners: workload × scheduler × backend -> Summary
-(single replica) or workload × scheduler × router × fleet -> FleetSummary
+"""One-call experiment runners: ``run(ExperimentSpec)`` -> Summary
+(single replica) or ``run_cluster(ExperimentSpec)`` -> FleetSummary
 (cluster co-simulation).
 
-``backend`` selects the execution substrate (DESIGN.md §2): "sim" (the
-roofline step-time model, default), "jax" (real decoding on a paged device
-KV cache via ``PagedJaxBackend`` — size the workload with
+``ExperimentSpec`` is the single front door (DESIGN.md §13): one dataclass
+composing the workload, engine, backend, cluster, and telemetry sub-configs
+that the legacy runners took as ~19 loose kwargs.  New axes (tenants,
+trace arrivals, fleet vectorization/profiling) land as fields on the
+sub-configs, never as more kwargs.  The legacy ``run_experiment`` /
+``run_cluster_experiment`` signatures survive as thin shims that emit a
+``DeprecationWarning`` and delegate through ``ExperimentSpec.from_kwargs``.
+
+``BackendSpec.kind`` selects the execution substrate (DESIGN.md §2):
+"sim" (the roofline step-time model, default), "jax" (real decoding on a
+paged device KV cache via ``PagedJaxBackend`` — size the workload with
 ``WorkloadSpec.prompt_cap``/``output_cap`` so sequences fit the device
 pool), or any ``Backend`` instance."""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Union
+import warnings
+from typing import Callable, Dict, List, Optional, Union
 
 from repro.core.baselines import make_scheduler
 from repro.core.service import ServiceModel
@@ -31,7 +40,7 @@ def _service_aware(scheduler: str) -> bool:
 
 def make_backend(backend: Union[str, Backend, None],
                  backend_kwargs: Optional[Dict] = None) -> Backend:
-    """Resolve the --backend axis: "sim" | "jax" | instance | None."""
+    """Resolve the backend axis: "sim" | "jax" | instance | None."""
     if backend is None or backend == "sim":
         kw = dict(backend_kwargs or {})
         kw.pop("tp", None)     # sim models its chips explicitly
@@ -56,43 +65,151 @@ def _with_tp(backend, backend_kwargs: Optional[Dict],
     return kw
 
 
-def run_experiment(scheduler: str = "tempo",
-                   spec: Optional[WorkloadSpec] = None,
-                   engine_cfg: Optional[EngineConfig] = None,
-                   backend: Union[str, Backend, None] = None,
-                   service: Optional[ServiceModel] = None,
-                   warmup: int = 512,
-                   sched_kwargs: Optional[Dict] = None,
-                   backend_kwargs: Optional[Dict] = None,
-                   obs=None, tracer=None,
-                   metrics_out: Optional[str] = None) -> Summary:
-    """``metrics_out`` enables telemetry with one flag: a registry and
-    tracer are created (unless passed in) and flushed to the directory as
-    Prometheus text exposition, a JSON snapshot, trace JSONL, and a
-    Chrome trace (DESIGN.md §9).  With all three left None telemetry is
-    the zero-cost no-op path."""
-    spec = spec or WorkloadSpec()
-    engine_cfg = engine_cfg or EngineConfig()
-    if metrics_out:
-        obs = obs if obs is not None else MetricsRegistry()
-        tracer = tracer if tracer is not None else Tracer()
-    backend = make_backend(backend, _with_tp(backend, backend_kwargs,
-                                             engine_cfg))
-    service = service or ServiceModel()
-    sk = dict(sched_kwargs or {})
-    if _service_aware(scheduler):
-        sk.setdefault("service", service)
-    sched = make_scheduler(scheduler, **sk)
+# ---------------------------------------------------------------------------
+# ExperimentSpec: the unified experiment API (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class BackendSpec:
+    """Execution substrate: kind ("sim" | "jax" | Backend instance | None
+    -> sim), constructor kwargs, an optional per-replica factory (cluster
+    runs; overrides kind/kwargs), and an optional sink list that collects
+    every backend the default cluster factory builds (for fleet-wide
+    token-stream digests)."""
+    kind: Union[str, Backend, None] = None
+    kwargs: Optional[Dict] = None
+    factory: Optional[Callable[[int], Backend]] = None
+    sink: Optional[List] = None
 
-    gen = WorkloadGen(spec)
-    if warmup and getattr(sched, "needs_predictions", False):
+
+@dataclasses.dataclass
+class ClusterSpec:
+    """Fleet shape + cluster-only policies.  Present on an ExperimentSpec
+    -> ``run_cluster``; absent (None) -> single-replica ``run``.
+    ``vectorized``/``profile`` select the event-selection path and enable
+    the phase-attributed event-loop profile (DESIGN.md §13)."""
+    router: Union[str, object] = "slo-margin"
+    n_replicas: int = 2
+    roles: Optional[List[str]] = None   # disaggregation (DESIGN.md §12)
+    autoscale: bool = False
+    autoscaler_cfg: Optional[object] = None
+    vectorized: bool = True
+    profile: bool = False
+
+
+@dataclasses.dataclass
+class TelemetrySpec:
+    """Observability wiring (DESIGN.md §9).  ``metrics_out`` alone enables
+    telemetry with one flag: a registry and tracer are created (unless
+    passed in) and flushed to the directory as Prometheus text exposition,
+    a JSON snapshot, trace JSONL, and a Chrome trace.  All three None is
+    the zero-cost no-op path."""
+    obs: Optional[MetricsRegistry] = None
+    tracer: Optional[Tracer] = None
+    metrics_out: Optional[str] = None
+
+
+# legacy kwarg -> (sub-config attribute path) for from_kwargs
+_LEGACY_MAP = {
+    "spec": ("workload",), "engine_cfg": ("engine",),
+    "service": ("service",), "warmup": ("warmup",),
+    "sched_kwargs": ("sched_kwargs",),
+    "backend": ("backend", "kind"), "backend_kwargs": ("backend", "kwargs"),
+    "backend_factory": ("backend", "factory"),
+    "backend_sink": ("backend", "sink"),
+    "router": ("cluster", "router"), "n_replicas": ("cluster", "n_replicas"),
+    "roles": ("cluster", "roles"), "autoscale": ("cluster", "autoscale"),
+    "autoscaler_cfg": ("cluster", "autoscaler_cfg"),
+    "vectorized": ("cluster", "vectorized"),
+    "profile": ("cluster", "profile"),
+    "obs": ("telemetry", "obs"), "tracer": ("telemetry", "tracer"),
+    "metrics_out": ("telemetry", "metrics_out"),
+}
+_CLUSTER_KEYS = frozenset(k for k, path in _LEGACY_MAP.items()
+                          if path[0] == "cluster")
+
+
+@dataclasses.dataclass
+class ExperimentSpec:
+    """One experiment, fully specified: workload x scheduler x backend
+    (x fleet x telemetry).  ``cluster=None`` means single replica."""
+    scheduler: str = "tempo"
+    workload: Optional[WorkloadSpec] = None
+    engine: Optional[EngineConfig] = None
+    backend: BackendSpec = dataclasses.field(default_factory=BackendSpec)
+    cluster: Optional[ClusterSpec] = None
+    telemetry: TelemetrySpec = dataclasses.field(
+        default_factory=TelemetrySpec)
+    service: Optional[ServiceModel] = None
+    warmup: int = 512               # predictor warm-start sample size
+    sched_kwargs: Optional[Dict] = None
+
+    @classmethod
+    def from_kwargs(cls, scheduler: str = "tempo", *,
+                    cluster: bool = False, **kw) -> "ExperimentSpec":
+        """Build a spec from the legacy flat-kwarg vocabulary of
+        ``run_experiment`` / ``run_cluster_experiment``.  ``cluster=True``
+        (or any cluster-only kwarg) attaches a ClusterSpec."""
+        exp = cls(scheduler=scheduler)
+        if cluster or (_CLUSTER_KEYS & kw.keys()):
+            exp.cluster = ClusterSpec()
+        for k, v in kw.items():
+            path = _LEGACY_MAP.get(k)
+            if path is None:
+                raise TypeError(f"unknown experiment kwarg {k!r}")
+            if len(path) == 1:
+                setattr(exp, path[0], v)
+            else:
+                setattr(getattr(exp, path[0]), path[1], v)
+        return exp
+
+    def resolved(self) -> "ExperimentSpec":
+        """A copy with every None sub-config replaced by its default, so
+        runners (and tests) can read fields without None-guards."""
+        return dataclasses.replace(
+            self,
+            workload=self.workload or WorkloadSpec(),
+            engine=self.engine or EngineConfig(),
+            service=self.service or ServiceModel())
+
+
+def _prep(exp: ExperimentSpec):
+    """Shared runner front half: resolve defaults, auto-create telemetry
+    when metrics_out is set, and build the scheduler kwargs."""
+    exp = exp.resolved()
+    tel = exp.telemetry
+    if tel.metrics_out:
+        tel = dataclasses.replace(
+            tel,
+            obs=tel.obs if tel.obs is not None else MetricsRegistry(),
+            tracer=tel.tracer if tel.tracer is not None else Tracer())
+        exp = dataclasses.replace(exp, telemetry=tel)
+    sk = dict(exp.sched_kwargs or {})
+    if _service_aware(exp.scheduler):
+        sk.setdefault("service", exp.service)
+    return exp, sk
+
+
+# ---------------------------------------------------------------------------
+def run(exp: ExperimentSpec) -> Summary:
+    """Single-replica experiment; ``exp.cluster`` must be None."""
+    if exp.cluster is not None:
+        raise ValueError("exp.cluster is set - use run_cluster()")
+    exp, sk = _prep(exp)
+    tel = exp.telemetry
+    backend = make_backend(exp.backend.kind,
+                           _with_tp(exp.backend.kind, exp.backend.kwargs,
+                                    exp.engine))
+    sched = make_scheduler(exp.scheduler, **sk)
+
+    gen = WorkloadGen(exp.workload)
+    if exp.warmup and getattr(sched, "needs_predictions", False):
         pred = getattr(sched, "predictor", None)
         if pred is not None:
-            pred.warm_start(gen.warmup_requests(warmup))
+            pred.warm_start(gen.warmup_requests(exp.warmup))
 
     singles, dags = gen.generate()
-    eng = ServeEngine(backend, sched, engine_cfg, workload=gen,
-                      obs=obs, tracer=tracer)
+    eng = ServeEngine(backend, sched, exp.engine, workload=gen,
+                      obs=tel.obs, tracer=tel.tracer)
     eng.load(singles, dags)
     finished = eng.run()
     # the denominator counts everything submitted: admitted (finished,
@@ -100,8 +217,8 @@ def run_experiment(scheduler: str = "tempo",
     # ended, and unspawned DAG stages — none may silently vanish from
     # goodput_frac
     n_submitted = eng.submitted_count
-    summ = summarize(sched.name if hasattr(sched, "name") else scheduler,
-                     finished, service, eng.now,
+    summ = summarize(sched.name if hasattr(sched, "name") else exp.scheduler,
+                     finished, exp.service, eng.now,
                      preemptions=eng.preempt_count,
                      prefill_tokens=eng.prefill_computed,
                      cached_tokens=eng.cached_tokens,
@@ -112,71 +229,53 @@ def run_experiment(scheduler: str = "tempo",
                      quanta=getattr(sched, "n_quanta", 0),
                      cost_residuals=eng.cost_residuals,
                      spec_proposed=eng.spec_proposed,
-                     spec_accepted=eng.spec_accepted)
-    if metrics_out:
-        dump_all(metrics_out, registry=obs, tracer=tracer,
+                     spec_accepted=eng.spec_accepted,
+                     tenant_admitted=eng.tenant_submitted() or None)
+    if tel.metrics_out:
+        dump_all(tel.metrics_out, registry=tel.obs, tracer=tel.tracer,
                  extra=summ.row())
     return summ
 
 
 # ---------------------------------------------------------------------------
-def run_cluster_experiment(scheduler: str = "tempo",
-                           router: Union[str, object] = "slo-margin",
-                           n_replicas: int = 2,
-                           spec: Optional[WorkloadSpec] = None,
-                           engine_cfg: Optional[EngineConfig] = None,
-                           backend_factory=None,
-                           service: Optional[ServiceModel] = None,
-                           warmup: int = 512,
-                           sched_kwargs: Optional[Dict] = None,
-                           autoscale: bool = False,
-                           autoscaler_cfg=None,
-                           backend: Union[str, Backend, None] = None,
-                           backend_kwargs: Optional[Dict] = None,
-                           roles: Optional[List[str]] = None,
-                           backend_sink: Optional[List] = None,
-                           obs=None, tracer=None,
-                           metrics_out: Optional[str] = None
-                           ) -> FleetSummary:
-    """Serve one workload across ``n_replicas`` co-simulated replicas.
+def run_cluster(exp: ExperimentSpec) -> FleetSummary:
+    """Serve one workload across a co-simulated fleet (``exp.cluster``
+    required; a default ClusterSpec is attached when absent).
 
-    Mirrors ``run_experiment``: same workload/scheduler knobs, plus a router
-    policy (name from ``cluster.router.ROUTERS`` or an instance) and
-    optional goodput-driven autoscaling.  Every replica gets its OWN
-    scheduler, backend, EngineConfig copy, and KV pool; they share only the
-    ``WorkloadGen`` (collective-DAG ground truth) and the arrival stream.
-    With ``engine_cfg.tp > 1`` on the jax backend the fleet is N replicas ×
-    tp-way device meshes: each replica gets its own tp-device slice of the
-    local device pool (wrapping round-robin when N·tp exceeds it).
+    Every replica gets its OWN scheduler, backend, EngineConfig copy, and
+    KV pool; they share only the ``WorkloadGen`` (collective-DAG ground
+    truth) and the arrival stream.  With ``engine.tp > 1`` on the jax
+    backend the fleet is N replicas × tp-way device meshes: each replica
+    gets its own tp-device slice of the local device pool (wrapping
+    round-robin when N·tp exceeds it).
 
-    ``roles`` disaggregates the fleet (DESIGN.md §12): one role per
-    initial replica (overriding ``n_replicas`` to its length), e.g.
+    ``cluster.roles`` disaggregates the fleet (DESIGN.md §12): one role
+    per initial replica (overriding ``n_replicas`` to its length), e.g.
     ``["prefill", "decode"]``; pair with ``router="disagg"`` to get the
     migration path — other routers treat roles as inert metadata.
-    ``backend_sink``, when a list, collects every replica backend the
+    ``backend.sink``, when a list, collects every replica backend the
     default factory builds, so callers can digest real token streams
     fleet-wide after the run."""
     from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
     from repro.cluster.engine import ClusterEngine
     from repro.cluster.router import make_router
 
-    spec = spec or WorkloadSpec()
-    engine_cfg = engine_cfg or EngineConfig()
-    service = service or ServiceModel()
-    if roles:
-        n_replicas = len(roles)
-    if metrics_out:
-        obs = obs if obs is not None else MetricsRegistry()
-        tracer = tracer if tracer is not None else Tracer()
+    if exp.cluster is None:
+        exp = dataclasses.replace(exp, cluster=ClusterSpec())
+    exp, base_sk = _prep(exp)
+    cs, tel, bs = exp.cluster, exp.telemetry, exp.backend
+    engine_cfg, service = exp.engine, exp.service
+    n_replicas = len(cs.roles) if cs.roles else cs.n_replicas
     # every replica runs the SAME model: a fresh backend per replica (own
     # device page pool / timers), built from the same backend spec
+    backend_factory = bs.factory
     if backend_factory is None:
-        base_kw = _with_tp(backend, backend_kwargs, engine_cfg)
+        base_kw = _with_tp(bs.kind, bs.kwargs, engine_cfg)
 
         def backend_factory(rid: int):
             kw = base_kw
             tp = (base_kw or {}).get("tp", 1)
-            if backend == "jax" and tp > 1 and "devices" not in base_kw:
+            if bs.kind == "jax" and tp > 1 and "devices" not in base_kw:
                 import jax
                 devs = jax.devices()
                 # distinct-per-replica slice, wrapping round-robin; with
@@ -188,55 +287,54 @@ def run_cluster_experiment(scheduler: str = "tempo",
                     kw = dict(base_kw)
                     kw["devices"] = [devs[(rid * tp + i) % len(devs)]
                                      for i in range(tp)]
-            return make_backend(backend, kw)
-    if backend_sink is not None:
+            return make_backend(bs.kind, kw)
+    if bs.sink is not None:
         _inner_bf = backend_factory
 
         def backend_factory(rid: int):            # noqa: F811
             b = _inner_bf(rid)
-            backend_sink.append(b)
+            bs.sink.append(b)
             return b
-    base_sk = dict(sched_kwargs or {})
-    if _service_aware(scheduler):
-        base_sk.setdefault("service", service)
 
-    gen = WorkloadGen(spec)
+    gen = WorkloadGen(exp.workload)
     warm: List[List] = []       # generated once, on the first replica that
                                 # needs predictor warm-start (own RNG, so a
                                 # lazy mid-stream draw never perturbs the
                                 # arrival stream)
 
     def replica_factory(rid: int) -> ServeEngine:
-        sched = make_scheduler(scheduler, **dict(base_sk))
-        if warmup and getattr(sched, "needs_predictions", False):
+        sched = make_scheduler(exp.scheduler, **dict(base_sk))
+        if exp.warmup and getattr(sched, "needs_predictions", False):
             pred = getattr(sched, "predictor", None)
             if pred is not None:
                 if not warm:
-                    warm.append(gen.warmup_requests(warmup))
+                    warm.append(gen.warmup_requests(exp.warmup))
                 pred.warm_start(warm[0])
         # each replica reports into a labeled view of the fleet registry
         # (one instrument per metric × replica) and the shared tracer
         cfg = dataclasses.replace(engine_cfg)
-        if roles and rid < len(roles):
-            cfg.role = roles[rid]
+        if cs.roles and rid < len(cs.roles):
+            cfg.role = cs.roles[rid]
         return ServeEngine(backend_factory(rid), sched, cfg, workload=gen,
-                           obs=None if obs is None
-                           else obs.labeled(replica=rid),
-                           tracer=tracer, replica=rid)
+                           obs=None if tel.obs is None
+                           else tel.obs.labeled(replica=rid),
+                           tracer=tel.tracer, replica=rid)
 
-    if isinstance(router, str):
+    if isinstance(cs.router, str):
         # a caller-supplied router INSTANCE keeps its own ServiceModel
         kw = {"service": service} \
-            if router in ("slo-margin", "prefix-affinity", "disagg") else {}
-        rt = make_router(router, **kw)
+            if cs.router in ("slo-margin", "prefix-affinity", "disagg",
+                             "tenant") else {}
+        rt = make_router(cs.router, **kw)
     else:
-        rt = router
-    scaler = Autoscaler(autoscaler_cfg or AutoscalerConfig(),
-                        service=service) if autoscale else None
+        rt = cs.router
+    scaler = Autoscaler(cs.autoscaler_cfg or AutoscalerConfig(),
+                        service=service) if cs.autoscale else None
     cluster = ClusterEngine(replica_factory, rt, n_replicas=n_replicas,
-                            autoscaler=scaler, obs=obs)
+                            autoscaler=scaler, obs=tel.obs,
+                            vectorized=cs.vectorized, profile=cs.profile)
     finished = cluster.run(gen.arrival_stream())
-    fs = summarize_fleet(rt.name, scheduler, finished, service,
+    fs = summarize_fleet(rt.name, exp.scheduler, finished, service,
                          cluster.makespan,
                          replica_timeline=cluster.replica_timeline,
                          routed=cluster.routed,
@@ -274,7 +372,34 @@ def run_cluster_experiment(scheduler: str = "tempo",
                          migrated_by_replica={
                              rep.rid: (rep.engine.migrated_in,
                                        rep.engine.migrated_out)
+                             for rep in cluster.replicas},
+                         tenants_by_replica={
+                             rep.rid: rep.engine.tenant_submitted()
                              for rep in cluster.replicas})
-    if metrics_out:
-        dump_all(metrics_out, registry=obs, tracer=tracer, extra=fs.row())
+    if cs.profile:
+        fs.profile = dict(cluster.profile)
+    if tel.metrics_out:
+        dump_all(tel.metrics_out, registry=tel.obs, tracer=tel.tracer,
+                 extra=fs.row())
     return fs
+
+
+# ---------------------------------------------------------------------------
+# Legacy flat-kwarg shims (DeprecationWarning; delegate via from_kwargs)
+# ---------------------------------------------------------------------------
+def run_experiment(scheduler: str = "tempo", **kw) -> Summary:
+    """Deprecated: build an ``ExperimentSpec`` and call ``run()``."""
+    warnings.warn("run_experiment(**kwargs) is deprecated; build an "
+                  "ExperimentSpec and call run()", DeprecationWarning,
+                  stacklevel=2)
+    return run(ExperimentSpec.from_kwargs(scheduler, **kw))
+
+
+def run_cluster_experiment(scheduler: str = "tempo", **kw) -> FleetSummary:
+    """Deprecated: build an ``ExperimentSpec`` (with a ``ClusterSpec``)
+    and call ``run_cluster()``."""
+    warnings.warn("run_cluster_experiment(**kwargs) is deprecated; build "
+                  "an ExperimentSpec and call run_cluster()",
+                  DeprecationWarning, stacklevel=2)
+    return run_cluster(ExperimentSpec.from_kwargs(scheduler, cluster=True,
+                                                  **kw))

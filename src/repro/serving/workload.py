@@ -85,12 +85,26 @@ class WorkloadSpec:
     # their sum, so token streams stay extension-consistent under caps.
     prompt_cap: int = 0
     output_cap: int = 0
-    # prefix-reuse scenarios
-    scenario: str = "mixed"           # mixed | multiturn | agentic
+    # prefix-reuse scenarios (SCENARIOS registry: mixed | multiturn |
+    # agentic | deep_research | any registered plugin)
+    scenario: str = "mixed"
     turns: Tuple[int, int] = (2, 6)   # turns per session (uniform, incl.)
     think_time: float = 2.0           # mean extra gap between turns (s)
     system_prompt_len: int = 0        # shared system prefix (tokens)
     shared_system_frac: float = 0.0   # sessions/chains using the prefix
+    # arrival process (ARRIVALS registry).  "" = historical auto-dispatch:
+    # ramp_peak != 1.0 selects the thinning ramp, else homogeneous Poisson
+    # (keeps every pre-existing spec's RNG stream bit-identical).
+    arrival: str = ""                 # "" | poisson | ramp_peak | trace
+    trace: str = ""                   # rate-profile JSON for arrival="trace"
+    # multi-tenant SLO classes: weights over TENANT_CLASSES order
+    # (free, pro, enterprise).  Empty = untenanted (no extra RNG draws, so
+    # historical streams stay bit-identical).
+    tenant_mix: Tuple[float, ...] = ()
+    # deep_research scenario shape: stages drawn uniform over
+    # research_stages (incl.), middle-stage fan-out uniform 1..breadth
+    research_stages: Tuple[int, int] = (4, 8)
+    research_breadth: int = 3
 
 
 # Token values are drawn below the reduced-model vocab (configs/archs.py
@@ -102,18 +116,70 @@ TOKEN_VOCAB = 256
 # would break cross-run determinism) for the per-entity token streams
 _STREAM_SALTS = {"sys": 1, "sess": 2, "dag": 3}
 
+# ---------------------------------------------------------------------------
+# Multi-tenant SLO classes.  Weight drives admission quota shares and
+# weighted-fairness shed order (low weight sheds first); slo_factor scales
+# the drawn SLO (enterprise buys tighter targets, free rides looser ones).
+# ---------------------------------------------------------------------------
+TENANT_CLASSES = ("free", "pro", "enterprise")
+TENANT_WEIGHT = {"free": 1.0, "pro": 2.0, "enterprise": 4.0}
+TENANT_SLO_FACTOR = {"free": 1.5, "pro": 1.0, "enterprise": 0.8}
+
+# ---------------------------------------------------------------------------
+# Scenario / arrival-process registries.  Core validation checks membership
+# only, so new workload classes plug in without editing WorkloadGen.  Values
+# are callables taking the WorkloadGen and returning an iterable of
+# (t, kind, obj) events (scenarios) or a list of arrival times (arrivals).
+# ---------------------------------------------------------------------------
+SCENARIOS: Dict[str, object] = {}
+ARRIVALS: Dict[str, object] = {}
+
+
+def register_scenario(name: str, fn) -> None:
+    SCENARIOS[name] = fn
+
+
+def register_arrival(name: str, fn) -> None:
+    ARRIVALS[name] = fn
+
+
+def _load_trace(path: str) -> Dict:
+    """Committed rate-profile JSON: {"bin_s": s, "rate": [multipliers]}.
+    The profile wraps if the workload outlasts it."""
+    import json
+    with open(path) as f:
+        prof = json.load(f)
+    rate = np.asarray(prof["rate"], float)
+    if rate.size == 0 or rate.max() <= 0:
+        raise ValueError(f"trace {path!r}: rate profile empty or all-zero")
+    if rate.min() < 0:
+        raise ValueError(f"trace {path!r}: negative rate multiplier")
+    return {"bin_s": float(prof.get("bin_s", 60.0)), "rate": rate}
+
 
 class WorkloadGen:
     def __init__(self, spec: WorkloadSpec):
-        if spec.scenario not in ("mixed", "multiturn", "agentic"):
+        if spec.scenario not in SCENARIOS:
             raise ValueError(f"unknown scenario {spec.scenario!r} "
-                             "(mixed | multiturn | agentic)")
+                             f"({' | '.join(sorted(SCENARIOS))})")
+        if spec.arrival and spec.arrival not in ARRIVALS:
+            raise ValueError(f"unknown arrival process {spec.arrival!r} "
+                             f"({' | '.join(sorted(ARRIVALS))})")
+        if spec.arrival == "trace" and not spec.trace:
+            raise ValueError("arrival='trace' needs WorkloadSpec.trace "
+                             "(path to a rate-profile JSON)")
+        if spec.tenant_mix and len(spec.tenant_mix) > len(TENANT_CLASSES):
+            raise ValueError(f"tenant_mix has {len(spec.tenant_mix)} "
+                             f"weights for {len(TENANT_CLASSES)} classes")
         self.spec = spec
         self.rng = np.random.default_rng(spec.seed)
         self._rid = 0
         self._dag = 0
         self._agentic: Dict[int, Dict] = {}   # dag_id -> chain ground truth
+        self._research: Dict[int, Dict] = {}  # dag_id -> tree ground truth
         self._sys: Optional[np.ndarray] = None
+        self._trace = _load_trace(spec.trace) \
+            if spec.arrival == "trace" else None
 
     # ------------------------------------------------------------------
     def _lens(self, coll: bool) -> Tuple[int, int]:
@@ -145,11 +211,42 @@ class WorkloadGen:
             return SLOSpec("collective", ttlt=20.0 * stages * s)
         return SLOSpec("none", ttlt=1e9)
 
+    def _draw_tenant(self) -> str:
+        """Tenant class for the next arrival ("" when untenanted).  Guarded
+        on tenant_mix so default specs draw nothing extra from the RNG."""
+        sp = self.spec
+        if not sp.tenant_mix:
+            return ""
+        w = np.asarray(sp.tenant_mix, float)
+        u = float(self.rng.random()) * float(w.sum())
+        i = int(np.searchsorted(np.cumsum(w), u, side="right"))
+        return TENANT_CLASSES[min(i, len(sp.tenant_mix) - 1)]
+
+    @staticmethod
+    def _label_tenant(r: Request, tenant: str) -> Request:
+        """Tenant label + fairness weight only (no SLO rescale — DAG
+        deadlines are scaled once at DAG creation)."""
+        if tenant:
+            r.tenant = tenant
+            r.meta["tenant_weight"] = TENANT_WEIGHT[tenant]
+        return r
+
+    def _apply_tenant(self, r: Request, tenant: str) -> Request:
+        if tenant:
+            r.slo = r.slo.scaled(TENANT_SLO_FACTOR[tenant])
+        return self._label_tenant(r, tenant)
+
     # ------------------------------------------------------------------
     def _arrivals(self) -> List[float]:
+        """Arrival times via the ARRIVALS registry.  spec.arrival="" keeps
+        the historical auto-dispatch (ramp iff ramp_peak != 1.0)."""
         sp = self.spec
-        if sp.ramp_peak != 1.0:
-            return self._arrivals_ramp()
+        name = sp.arrival or (
+            "ramp_peak" if sp.ramp_peak != 1.0 else "poisson")
+        return ARRIVALS[name](self)
+
+    def _arrivals_poisson(self) -> List[float]:
+        sp = self.spec
         ts, t = [], 0.0
         rate = sp.rate
         while t < sp.duration:
@@ -188,6 +285,26 @@ class WorkloadGen:
                 since += 1
         return ts
 
+    def _arrivals_trace(self) -> List[float]:
+        """Trace-driven non-homogeneous Poisson by thinning: the committed
+        JSON profile gives a piecewise-constant rate multiplier per bin
+        (diurnal curves, bursts/spikes); the instantaneous rate is
+        spec.rate * multiplier(t mod profile length).  Deterministic given
+        (trace, seed) — replaying the same trace reproduces the stream
+        byte-for-byte."""
+        sp = self.spec
+        prof = self._trace
+        bins, bin_s = prof["rate"], prof["bin_s"]
+        total = bin_s * len(bins)
+        rmax = sp.rate * float(bins.max())
+        ts, t = [], 0.0
+        while t < sp.duration:
+            t += float(self.rng.exponential(1.0 / rmax))
+            mult = float(bins[int((t % total) // bin_s)])
+            if self.rng.random() < mult * sp.rate / rmax:
+                ts.append(t)
+        return ts
+
     def _next_rid(self) -> int:
         self._rid += 1
         return self._rid
@@ -207,7 +324,7 @@ class WorkloadGen:
         r = Request(rid=self._next_rid(), app=app, arrival=t,
                     prompt_len=li, true_output_len=lo, slo=self._slo(kind))
         r.meta["hint"] = self._hint(lo)
-        return r
+        return self._apply_tenant(r, self._draw_tenant())
 
     def _mk_dag(self, t: float) -> Tuple[CollectiveDag, List[Request]]:
         """ToT math tree (depth 2, 3 thoughts/step) or agentic chain —
@@ -221,8 +338,11 @@ class WorkloadGen:
             app = "agent"
             sizes = [1] * int(self.rng.integers(3, 7))   # codegen chain
         slo = self._slo("collective", stages=len(sizes))
+        tenant = self._draw_tenant()
+        if tenant:
+            slo = slo.scaled(TENANT_SLO_FACTOR[tenant])
         dag = CollectiveDag(dag_id=self._dag, app=app, arrival=t,
-                            ttlt=slo.ttlt, stage_sizes=sizes)
+                            ttlt=slo.ttlt, stage_sizes=sizes, tenant=tenant)
         stage_lens = []
         for n in sizes:
             lens = []
@@ -250,6 +370,8 @@ class WorkloadGen:
         """Stage requests from the precomputed hidden ground truth."""
         if dag.dag_id in self._agentic:
             return self._spawn_agentic_stage(dag, stage, now)
+        if dag.dag_id in self._research:
+            return self._spawn_research_stage(dag, stage, now)
         reqs = []
         rids = self._dag_rids[dag.dag_id][stage]
         for i, (li, lo) in enumerate(self._dag_lens[dag.dag_id][stage]):
@@ -260,7 +382,7 @@ class WorkloadGen:
                         dag_id=dag.dag_id, stage=stage)
             r.meta["hint"] = self._hint_det(lo, r.rid)
             r.meta["n_stages"] = len(dag.stage_sizes)
-            reqs.append(r)
+            reqs.append(self._label_tenant(r, dag.tenant))
         return reqs
 
     def _hint_det(self, out_len: int, salt: int) -> float:
@@ -305,6 +427,7 @@ class WorkloadGen:
         n_turns = int(self.rng.integers(sp.turns[0], sp.turns[1] + 1))
         shared = bool(self.rng.random() < sp.shared_system_frac)
         sys_len = sp.system_prompt_len if shared else 0
+        tenant = self._draw_tenant()   # one class per session
         events, hist, t = [], 0, t0
         for turn in range(n_turns):
             ui, uo = self._seg_lens(False)
@@ -321,7 +444,7 @@ class WorkloadGen:
             r.meta["output_tokens"] = stream[hist:hist + uo]
             r.meta["hint"] = self._hint(uo)
             r.meta["turn"] = turn
-            events.append((t, "r", r))
+            events.append((t, "r", self._apply_tenant(r, tenant)))
             hist += uo
             # open-loop think gap: rough service estimate + think time, so
             # the next turn usually lands after this one finishes (and its
@@ -356,8 +479,12 @@ class WorkloadGen:
         n_stages = int(self.rng.integers(3, 7))
         shared = bool(self.rng.random() < sp.shared_system_frac)
         slo = self._slo("collective", stages=n_stages)
+        tenant = self._draw_tenant()
+        if tenant:
+            slo = slo.scaled(TENANT_SLO_FACTOR[tenant])
         dag = CollectiveDag(dag_id=self._dag, app="agent", arrival=t,
-                            ttlt=slo.ttlt, stage_sizes=[1] * n_stages)
+                            ttlt=slo.ttlt, stage_sizes=[1] * n_stages,
+                            tenant=tenant)
         lens = []
         for _ in range(n_stages):
             li, lo = self._seg_lens(True)
@@ -390,7 +517,7 @@ class WorkloadGen:
         r.meta["output_tokens"] = stream[hist_p:hist_p + lo]
         r.meta["hint"] = self._hint_det(lo, r.rid)
         r.meta["n_stages"] = len(dag.stage_sizes)
-        return [r]
+        return [self._label_tenant(r, dag.tenant)]
 
     def _gen_agentic(self) -> List[Tuple[float, str, object]]:
         sp = self.spec
@@ -403,20 +530,86 @@ class WorkloadGen:
             events.append((t, "dag", self._mk_agentic_dag(t)))
         return events
 
-    # ------------------------------------------------------------------
-    def arrival_stream(self) -> Iterator[Tuple[float, str, object]]:
-        """Time-ordered arrival events, consumable incrementally — a cluster
-        router pulls one event at a time and dispatches it to a replica.
-        Yields (t, "r", Request) or (t, "dag", (CollectiveDag, stage0 reqs));
-        the RNG draw order is identical to ``generate()`` so single-engine
-        and cluster runs see the same workload."""
+    # -- deep_research: long compound DAGs with evolving dependencies ---
+    def _mk_research_dag(self, t: float
+                         ) -> Tuple[CollectiveDag, List[Request]]:
+        """Research tree: a plan stage, several fan-out stages of parallel
+        searches whose width is drawn per stage (the "evolving" structure —
+        neither stage count nor fan-out is revealed to the scheduler), and
+        a width-1 synthesis stage.  Every stage-n member's prompt extends
+        the FULL accumulated chain context (all prior stages' segments),
+        then appends its own fresh query segment — siblings share the
+        history prefix (prefix-cache fan-out) and diverge after it.  All
+        segment lengths are drawn up-front (hidden ground truth)."""
         sp = self.spec
-        if sp.scenario == "multiturn":
-            yield from self._gen_multiturn()
-            return
-        if sp.scenario == "agentic":
-            yield from self._gen_agentic()
-            return
+        self._dag += 1
+        n_stages = int(self.rng.integers(sp.research_stages[0],
+                                         sp.research_stages[1] + 1))
+        sizes = [1] + [int(self.rng.integers(1, sp.research_breadth + 1))
+                       for _ in range(max(n_stages - 2, 0))] + [1]
+        shared = bool(self.rng.random() < sp.shared_system_frac)
+        slo = self._slo("collective", stages=len(sizes))
+        tenant = self._draw_tenant()
+        if tenant:
+            slo = slo.scaled(TENANT_SLO_FACTOR[tenant])
+        dag = CollectiveDag(dag_id=self._dag, app="research", arrival=t,
+                            ttlt=slo.ttlt, stage_sizes=sizes, tenant=tenant)
+        lens = []
+        for n in sizes:
+            stage = []
+            for _ in range(n):
+                li, lo = self._seg_lens(True)
+                stage.append((max(4, li // 4),
+                              max(8, lo // (2 * len(sizes)))))
+            lens.append(stage)
+        self._research[dag.dag_id] = dict(
+            lens=lens, sys_len=sp.system_prompt_len if shared else 0,
+            rids=[[self._next_rid() for _ in range(n)] for n in sizes])
+        return dag, self.spawn_stage(dag, 0, t)
+
+    def _spawn_research_stage(self, dag: CollectiveDag, stage: int,
+                              now: float) -> List[Request]:
+        info = self._research[dag.dag_id]
+        lens, sys_len = info["lens"], info["sys_len"]
+        # accumulated chain context: every prior stage contributed ALL of
+        # its members' (query + finding) segments — stage n depends on the
+        # union of stage n-1's outputs, not a single parent
+        hist = sum(li + lo for st in lens[:stage] for li, lo in st)
+        reqs, off = [], 0
+        for i, (li, lo) in enumerate(lens[stage]):
+            seg0 = hist + off           # this member's slice of the stream
+            r = Request(rid=info["rids"][stage][i], app="research",
+                        arrival=now, prompt_len=sys_len + hist + li,
+                        true_output_len=lo,
+                        slo=SLOSpec("collective",
+                                    ttlt=max(dag.deadline - now, 1e-3)),
+                        dag_id=dag.dag_id, stage=stage)
+            stream = self._stream_tokens("dag", dag.dag_id, seg0 + li + lo)
+            ptoks = np.concatenate([stream[:hist], stream[seg0:seg0 + li]])
+            if sys_len:
+                ptoks = np.concatenate([self._sys_tokens(), ptoks])
+            r.meta["prompt_tokens"] = ptoks
+            r.meta["output_tokens"] = stream[seg0 + li:seg0 + li + lo]
+            r.meta["hint"] = self._hint_det(lo, r.rid)
+            r.meta["n_stages"] = len(dag.stage_sizes)
+            reqs.append(self._label_tenant(r, dag.tenant))
+            off += li + lo
+        return reqs
+
+    def _gen_deep_research(self) -> List[Tuple[float, str, object]]:
+        sp = self.spec
+        events: List[Tuple[float, str, object]] = []
+        t = 0.0
+        while True:
+            t += float(self.rng.exponential(1.0 / sp.rate))
+            if t >= sp.duration:
+                break
+            events.append((t, "dag", self._mk_research_dag(t)))
+        return events
+
+    # -- mixed: the historical default stream ---------------------------
+    def _gen_mixed(self) -> Iterator[Tuple[float, str, object]]:
+        sp = self.spec
         mix = np.array(sp.mix, float)
         mix = mix / mix.sum()
         for t in self._arrivals():
@@ -429,6 +622,16 @@ class WorkloadGen:
                 yield t, "r", self._mk_single("throughput", t, "code")
             else:
                 yield t, "dag", self._mk_dag(t)
+
+    # ------------------------------------------------------------------
+    def arrival_stream(self) -> Iterator[Tuple[float, str, object]]:
+        """Time-ordered arrival events, consumable incrementally — a cluster
+        router pulls one event at a time and dispatches it to a replica.
+        Yields (t, "r", Request) or (t, "dag", (CollectiveDag, stage0 reqs));
+        the RNG draw order is identical to ``generate()`` so single-engine
+        and cluster runs see the same workload.  Dispatches through the
+        SCENARIOS registry."""
+        yield from SCENARIOS[self.spec.scenario](self)
 
     def generate(self):
         """-> (singles: [Request], dags: [(CollectiveDag, stage0 reqs)])."""
@@ -458,3 +661,13 @@ class WorkloadGen:
         finally:
             self.rng = saved
         return out
+
+
+# built-in scenarios / arrival processes (plugins call register_* too)
+register_scenario("mixed", WorkloadGen._gen_mixed)
+register_scenario("multiturn", WorkloadGen._gen_multiturn)
+register_scenario("agentic", WorkloadGen._gen_agentic)
+register_scenario("deep_research", WorkloadGen._gen_deep_research)
+register_arrival("poisson", WorkloadGen._arrivals_poisson)
+register_arrival("ramp_peak", WorkloadGen._arrivals_ramp)
+register_arrival("trace", WorkloadGen._arrivals_trace)

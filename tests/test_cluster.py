@@ -8,7 +8,8 @@ from repro.cluster.engine import ClusterEngine
 from repro.cluster.router import ROUTERS, make_router
 from repro.core.baselines import make_scheduler
 from repro.serving.engine import EngineConfig, ServeEngine, SimBackend
-from repro.serving.run import run_cluster_experiment, run_experiment
+from repro.serving.run import ClusterSpec, ExperimentSpec, run, \
+    run_cluster
 from repro.serving.workload import WorkloadGen, WorkloadSpec
 
 SMALL = WorkloadSpec(rate=8.0, duration=20.0, seed=0)
@@ -28,9 +29,11 @@ def test_arrival_stream_matches_generate():
 
 def test_single_replica_cluster_reproduces_single_engine():
     spec = WorkloadSpec(rate=2.0, duration=40.0, seed=7)
-    single = run_experiment("tempo", spec=spec, warmup=128)
-    fleet = run_cluster_experiment("tempo", router="round-robin",
-                                   n_replicas=1, spec=spec, warmup=128)
+    single = run(ExperimentSpec(scheduler="tempo", workload=spec,
+                                warmup=128))
+    fleet = run_cluster(ExperimentSpec(
+        scheduler="tempo", workload=spec, warmup=128,
+        cluster=ClusterSpec(router="round-robin", n_replicas=1)))
     assert fleet.fleet.n_finished == single.n_finished
     assert fleet.fleet.service_gain == pytest.approx(single.service_gain,
                                                      rel=1e-6)
@@ -41,8 +44,9 @@ def test_single_replica_cluster_reproduces_single_engine():
 
 @pytest.mark.parametrize("router", sorted(ROUTERS))
 def test_all_routers_drain_and_conserve_work(router):
-    f = run_cluster_experiment("sarathi", router=router, n_replicas=2,
-                               spec=SMALL, warmup=0)
+    f = run_cluster(ExperimentSpec(
+        scheduler="sarathi", workload=SMALL, warmup=0,
+        cluster=ClusterSpec(router=router, n_replicas=2)))
     total = sum(s.n_finished for s in f.per_replica.values())
     assert total == f.fleet.n_finished
     assert f.fleet.n_finished > 100
@@ -81,10 +85,12 @@ def test_slo_margin_beats_round_robin_at_saturation():
     # point must keep the fleet under genuine contention, which is what
     # this test is about
     spec = WorkloadSpec(rate=56.0, duration=18.0, seed=4)
-    rr = run_cluster_experiment("tempo", router="round-robin", n_replicas=4,
-                                spec=spec, warmup=192)
-    margin = run_cluster_experiment("tempo", router="slo-margin",
-                                    n_replicas=4, spec=spec, warmup=192)
+    rr = run_cluster(ExperimentSpec(
+        scheduler="tempo", workload=spec, warmup=192,
+        cluster=ClusterSpec(router="round-robin", n_replicas=4)))
+    margin = run_cluster(ExperimentSpec(
+        scheduler="tempo", workload=spec, warmup=192,
+        cluster=ClusterSpec(router="slo-margin", n_replicas=4)))
     assert margin.fleet.n_finished == rr.fleet.n_finished  # same total work
     assert margin.goodput_frac > rr.goodput_frac
 
@@ -93,9 +99,10 @@ def test_autoscaler_grows_then_drains_under_ramp():
     spec = WorkloadSpec(rate=6.0, duration=60.0, seed=3, ramp_peak=5.0)
     cfg = AutoscalerConfig(min_replicas=1, max_replicas=6, cooldown=6.0,
                            window=20.0, target=0.9)
-    f = run_cluster_experiment("tempo", router="slo-margin", n_replicas=1,
-                               spec=spec, warmup=192, autoscale=True,
-                               autoscaler_cfg=cfg)
+    f = run_cluster(ExperimentSpec(
+        scheduler="tempo", workload=spec, warmup=192,
+        cluster=ClusterSpec(router="slo-margin", n_replicas=1,
+                            autoscale=True, autoscaler_cfg=cfg)))
     counts = [n for _, n in f.replica_timeline]
     assert max(counts) > 1, "fleet never grew under the ramp"
     assert counts[-1] < max(counts), "fleet never drained after the peak"

@@ -29,8 +29,8 @@ from repro.serving.engine import (EngineConfig, ServeEngine,  # noqa: E402
 from repro.serving.kvcache import BlockManager                # noqa: E402
 from repro.serving.request import (Request, ReqState,         # noqa: E402
                                    SLOSpec)
-from repro.serving.run import (run_cluster_experiment,        # noqa: E402
-                               run_experiment)
+from repro.serving.run import (BackendSpec, ClusterSpec,      # noqa: E402
+                               ExperimentSpec, run, run_cluster)
 from repro.serving.workload import WorkloadSpec               # noqa: E402
 
 CONTENDED = dict(rate=20.0, duration=8.0, seed=5, mix=(3, 2, 0),
@@ -269,11 +269,13 @@ def test_disagg_cluster_conserves_requests_and_beats_colocated():
     """The frozen contended arm: migration loses no requests fleet-wide,
     migrated counts match, and disaggregation beats colocated goodput."""
     spec = WorkloadSpec(**CONTENDED)
-    co = run_cluster_experiment("vllm", router="slo-margin", n_replicas=2,
-                                spec=spec, warmup=64)
-    di = run_cluster_experiment("vllm", router="disagg", n_replicas=2,
-                                spec=spec, warmup=64,
-                                roles=["prefill", "decode"])
+    co = run_cluster(ExperimentSpec(
+        scheduler="vllm", workload=spec, warmup=64,
+        cluster=ClusterSpec(router="slo-margin", n_replicas=2)))
+    di = run_cluster(ExperimentSpec(
+        scheduler="vllm", workload=spec, warmup=64,
+        cluster=ClusterSpec(router="disagg", n_replicas=2,
+                            roles=["prefill", "decode"])))
     assert di.fleet.migrated_in == di.fleet.migrated_out > 0
     # conservation: both arms account for the same submitted population
     assert di.fleet.n_admitted == co.fleet.n_admitted
@@ -284,8 +286,10 @@ def test_disagg_cluster_conserves_requests_and_beats_colocated():
 
 def test_roles_thread_through_cluster_runner():
     spec = WorkloadSpec(rate=4.0, duration=3.0, seed=2, mix=(1, 1, 0))
-    f = run_cluster_experiment("tempo", router="disagg", spec=spec,
-                               warmup=64, roles=["prefill", "decode"])
+    f = run_cluster(ExperimentSpec(
+        scheduler="tempo", workload=spec, warmup=64,
+        cluster=ClusterSpec(router="disagg",
+                            roles=["prefill", "decode"])))
     assert f.n_replicas_peak == 2
     # per-replica migration accounting surfaces in the fleet summary
     assert f.fleet.migrated_in == sum(
@@ -297,8 +301,10 @@ def test_roles_thread_through_cluster_runner():
 def test_other_routers_treat_roles_as_inert_metadata():
     """Roles without the disagg router must not migrate or crash."""
     spec = WorkloadSpec(rate=4.0, duration=3.0, seed=2)
-    f = run_cluster_experiment("tempo", router="round-robin", spec=spec,
-                               warmup=64, roles=["prefill", "decode"])
+    f = run_cluster(ExperimentSpec(
+        scheduler="tempo", workload=spec, warmup=64,
+        cluster=ClusterSpec(router="round-robin",
+                            roles=["prefill", "decode"])))
     assert f.fleet.migrated_in == 0 and f.fleet.migrated_out == 0
     assert f.fleet.n_finished > 0
 
@@ -315,19 +321,21 @@ def _jax_reference(tp=1):
     from repro.serving.run import make_backend
     kw = dict(JAX_KW, tp=tp) if tp > 1 else dict(JAX_KW)
     bk = make_backend("jax", kw)
-    run_experiment("tempo", spec=WorkloadSpec(**JAX_SPEC),
-                   engine_cfg=EngineConfig(tp=tp, **JAX_CFG),
-                   backend=bk, warmup=64)
+    run(ExperimentSpec(scheduler="tempo", workload=WorkloadSpec(**JAX_SPEC),
+                       engine=EngineConfig(tp=tp, **JAX_CFG),
+                       backend=BackendSpec(kind=bk), warmup=64))
     return _merged_streams([bk])
 
 
 def _jax_disagg(tp=1):
     sink = []
-    f = run_cluster_experiment(
-        "tempo", router="disagg", spec=WorkloadSpec(**JAX_SPEC),
-        engine_cfg=EngineConfig(tp=tp, **JAX_CFG), backend="jax",
-        backend_kwargs=dict(JAX_KW), warmup=64,
-        roles=["prefill", "decode"], backend_sink=sink)
+    f = run_cluster(ExperimentSpec(
+        scheduler="tempo", workload=WorkloadSpec(**JAX_SPEC),
+        engine=EngineConfig(tp=tp, **JAX_CFG),
+        backend=BackendSpec(kind="jax", kwargs=dict(JAX_KW), sink=sink),
+        warmup=64,
+        cluster=ClusterSpec(router="disagg",
+                            roles=["prefill", "decode"])))
     return _merged_streams(sink), f
 
 

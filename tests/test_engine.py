@@ -5,7 +5,7 @@ import pytest
 
 from repro.core.service import ServiceModel
 from repro.serving.engine import EngineConfig, ServeEngine, SimBackend
-from repro.serving.run import run_experiment
+from repro.serving.run import ExperimentSpec, run
 from repro.serving.metrics import summarize
 from repro.serving.request import ReqState
 from repro.serving.workload import WorkloadGen, WorkloadSpec
@@ -16,22 +16,22 @@ SPEC = WorkloadSpec(rate=2.0, duration=40.0, seed=7)
 @pytest.mark.parametrize("name", ["vllm", "sarathi", "autellix", "sjf",
                                   "edf", "tempo", "tempo-precise"])
 def test_all_schedulers_drain(name):
-    s = run_experiment(name, spec=SPEC, warmup=128)
+    s = run(ExperimentSpec(scheduler=name, workload=SPEC, warmup=128))
     assert s.n_finished > 50
     assert s.service_gain > 0
     assert 0.0 <= s.goodput_frac <= 1.0
 
 
 def test_identical_workload_across_schedulers():
-    a = run_experiment("vllm", spec=SPEC, warmup=128)
-    b = run_experiment("tempo", spec=SPEC, warmup=128)
+    a = run(ExperimentSpec(scheduler="vllm", workload=SPEC, warmup=128))
+    b = run(ExperimentSpec(scheduler="tempo", workload=SPEC, warmup=128))
     assert a.n_finished == b.n_finished          # same total work
     assert abs(a.max_gain - b.max_gain) < 1e-6
 
 
 def test_determinism_same_seed():
-    a = run_experiment("tempo", spec=SPEC, warmup=64)
-    b = run_experiment("tempo", spec=SPEC, warmup=64)
+    a = run(ExperimentSpec(scheduler="tempo", workload=SPEC, warmup=64))
+    b = run(ExperimentSpec(scheduler="tempo", workload=SPEC, warmup=64))
     assert a.service_gain == pytest.approx(b.service_gain)
     assert a.n_finished == b.n_finished
 
@@ -232,7 +232,7 @@ def test_engine_config_not_shared_between_engines():
 
 
 def test_summary_math():
-    s = run_experiment("sarathi", spec=SPEC, warmup=0)
+    s = run(ExperimentSpec(scheduler="sarathi", workload=SPEC, warmup=0))
     tot = sum(v["n"] for v in s.per_type.values())
     assert tot == s.n_finished
     assert s.service_gain <= s.max_gain + 1e-6

@@ -1,0 +1,271 @@
+"""Fleet scale-out (DESIGN.md §13): scenario/arrival registries,
+trace-replay determinism, multi-tenant quotas and weighted-fairness
+shedding, vectorized event selection, and the ExperimentSpec API."""
+
+import json
+import os
+import warnings
+
+import pytest
+
+from repro.serving.engine import EngineConfig
+from repro.serving.run import (ClusterSpec, ExperimentSpec, TelemetrySpec,
+                               run, run_cluster, run_cluster_experiment,
+                               run_experiment)
+from repro.serving.workload import (ARRIVALS, SCENARIOS, TENANT_CLASSES,
+                                    WorkloadGen, WorkloadSpec)
+
+TRACES = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "traces")
+
+
+def _trace(name: str) -> str:
+    return os.path.join(TRACES, name + ".json")
+
+
+TENANTED = WorkloadSpec(rate=24.0, duration=10.0, seed=5,
+                        arrival="trace", trace=_trace("diurnal"),
+                        tenant_mix=(0.6, 0.3, 0.1))
+
+
+# ---------------------------------------------------------------------------
+# scenario / arrival registries
+# ---------------------------------------------------------------------------
+def test_registries_cover_builtin_names():
+    assert {"mixed", "multiturn", "agentic",
+            "deep_research"} <= set(SCENARIOS)
+    assert {"poisson", "ramp_peak", "trace"} <= set(ARRIVALS)
+
+
+def test_unknown_scenario_rejected():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        WorkloadGen(WorkloadSpec(scenario="nope"))
+
+
+def test_unknown_arrival_rejected():
+    with pytest.raises(ValueError, match="unknown arrival"):
+        WorkloadGen(WorkloadSpec(arrival="nope"))
+
+
+def test_trace_arrival_requires_trace_path():
+    with pytest.raises(ValueError, match="needs WorkloadSpec.trace"):
+        WorkloadGen(WorkloadSpec(arrival="trace"))
+
+
+def test_overlong_tenant_mix_rejected():
+    with pytest.raises(ValueError, match="tenant_mix"):
+        WorkloadGen(WorkloadSpec(tenant_mix=(1, 1, 1, 1)))
+
+
+def test_bad_trace_profiles_rejected(tmp_path):
+    dead = tmp_path / "dead.json"
+    dead.write_text(json.dumps({"bin_s": 1.0, "rate": [0.0, 0.0]}))
+    with pytest.raises(ValueError, match="empty or all-zero"):
+        WorkloadGen(WorkloadSpec(arrival="trace", trace=str(dead)))
+    neg = tmp_path / "neg.json"
+    neg.write_text(json.dumps({"bin_s": 1.0, "rate": [1.0, -0.5]}))
+    with pytest.raises(ValueError, match="negative rate"):
+        WorkloadGen(WorkloadSpec(arrival="trace", trace=str(neg)))
+
+
+# ---------------------------------------------------------------------------
+# trace-driven arrivals
+# ---------------------------------------------------------------------------
+def test_trace_arrivals_follow_profile():
+    """Arrival density in the spike bins of the committed spike trace must
+    clearly exceed the quiet-bin density (thinned Poisson replay)."""
+    spec = WorkloadSpec(rate=30.0, duration=96.0, seed=2,
+                        arrival="trace", trace=_trace("spike"))
+    gen = WorkloadGen(spec)
+    with open(_trace("spike")) as f:
+        prof = json.load(f)
+    bin_s, mult = prof["bin_s"], prof["rate"]
+    period = bin_s * len(mult)
+    hot = quiet = hot_s = quiet_s = 0.0
+    counts = [0] * len(mult)
+    for t, _, _ in gen.arrival_stream():
+        counts[int((t % period) // bin_s)] += 1
+    n_periods = spec.duration / period
+    for i, m in enumerate(mult):
+        if m > 1.0:
+            hot, hot_s = hot + counts[i], hot_s + bin_s * n_periods
+        else:
+            quiet, quiet_s = quiet + counts[i], quiet_s + bin_s * n_periods
+    assert hot / hot_s > 2.0 * (quiet / quiet_s)
+
+
+def test_trace_replay_deterministic():
+    """Same committed trace + seed => byte-identical Summary rows,
+    including the per-tenant breakdown."""
+    rows = [run(ExperimentSpec(scheduler="tempo", workload=TENANTED,
+                               warmup=64)).row() for _ in range(2)]
+    assert json.dumps(rows[0], sort_keys=True) == \
+        json.dumps(rows[1], sort_keys=True)
+    assert rows[0]["per_tenant"]
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant quotas + weighted fairness
+# ---------------------------------------------------------------------------
+def test_tenant_breakdown_consistent_single_engine():
+    s = run(ExperimentSpec(scheduler="tempo", workload=TENANTED,
+                           warmup=64))
+    assert set(s.per_tenant) == set(TENANT_CLASSES)
+    for tr in s.per_tenant.values():
+        assert tr["n"] + tr["n_shed"] <= tr["n_admitted"]
+        assert 0.0 <= tr["goodput_frac"] <= 1.0
+        assert 0.0 <= tr["slo_met"] <= 1.0
+    total_admitted = sum(tr["n_admitted"] for tr in s.per_tenant.values())
+    assert total_admitted == s.n_admitted
+
+
+def test_admission_quota_sheds_but_never_starves():
+    """Under a tight admission quota and saturating load every class keeps
+    serving (weighted caps guarantee a floor), the big free class gets
+    quota-shed hardest, and enterprise (4x weight) is shed at a lower
+    rate than free."""
+    spec = WorkloadSpec(rate=60.0, duration=8.0, seed=9,
+                        tenant_mix=(0.6, 0.3, 0.1))
+    s = run(ExperimentSpec(scheduler="gmg", workload=spec,
+                           engine=EngineConfig(tenant_quota=2), warmup=64))
+    pt = s.per_tenant
+    assert set(pt) == set(TENANT_CLASSES)
+    for tenant, tr in pt.items():
+        assert tr["n"] > 0, f"tenant {tenant} fully starved"
+    shed_rate = {t: tr["n_shed"] / max(tr["n_admitted"], 1)
+                 for t, tr in pt.items()}
+    assert shed_rate["free"] > 0.0
+    assert shed_rate["enterprise"] <= shed_rate["free"]
+
+
+def test_tenant_router_fleet_breakdown():
+    f = run_cluster(ExperimentSpec(
+        scheduler="tempo", workload=TENANTED, warmup=64,
+        cluster=ClusterSpec(router="tenant", n_replicas=2)))
+    pt = f.fleet.per_tenant
+    assert set(pt) == set(TENANT_CLASSES)
+    assert sum(tr["n"] for tr in pt.values()) == f.fleet.n_finished
+    assert sum(tr["n_admitted"] for tr in pt.values()) == f.fleet.n_admitted
+
+
+# ---------------------------------------------------------------------------
+# vectorized event loop
+# ---------------------------------------------------------------------------
+def test_vectorized_matches_scan_cluster():
+    """argmin-based event selection must reproduce the legacy per-event
+    scan exactly — same fleet row, same per-replica routing."""
+    outs = {}
+    for vec in (True, False):
+        outs[vec] = run_cluster(ExperimentSpec(
+            scheduler="tempo", workload=TENANTED, warmup=64,
+            cluster=ClusterSpec(router="slo-margin", n_replicas=3,
+                                vectorized=vec)))
+    assert outs[True].routed == outs[False].routed
+    assert json.dumps(outs[True].fleet.row(), sort_keys=True) == \
+        json.dumps(outs[False].fleet.row(), sort_keys=True)
+
+
+def test_profile_attributes_event_loop_time():
+    f = run_cluster(ExperimentSpec(
+        scheduler="tempo", workload=TENANTED, warmup=64,
+        cluster=ClusterSpec(router="round-robin", n_replicas=2,
+                            profile=True)))
+    prof = f.profile
+    assert prof is not None
+    assert set(prof) == {"select", "route", "step", "harvest", "migrate",
+                         "scale", "events"}
+    assert prof["events"] > 0
+    assert prof["step"] > 0.0 and prof["select"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# ExperimentSpec API + legacy shims
+# ---------------------------------------------------------------------------
+def test_from_kwargs_roundtrip():
+    exp = ExperimentSpec.from_kwargs(
+        "gmg", spec=TENANTED, engine_cfg=EngineConfig(tenant_quota=4),
+        warmup=32, backend="sim", router="tenant", n_replicas=3,
+        metrics_out="/tmp/x")
+    assert exp.scheduler == "gmg"
+    assert exp.workload is TENANTED
+    assert exp.engine.tenant_quota == 4
+    assert exp.warmup == 32
+    assert exp.backend.kind == "sim"
+    assert exp.cluster is not None           # cluster kwargs imply a fleet
+    assert exp.cluster.router == "tenant"
+    assert exp.cluster.n_replicas == 3
+    assert exp.telemetry.metrics_out == "/tmp/x"
+    # no cluster kwargs, no cluster flag -> single replica
+    assert ExperimentSpec.from_kwargs("tempo", spec=TENANTED).cluster is None
+    assert ExperimentSpec.from_kwargs(
+        "tempo", cluster=True).cluster is not None
+
+
+def test_from_kwargs_rejects_unknown():
+    with pytest.raises(TypeError, match="unknown experiment kwarg"):
+        ExperimentSpec.from_kwargs("tempo", not_a_kwarg=1)
+
+
+def test_legacy_shims_warn_and_match():
+    spec = WorkloadSpec(rate=6.0, duration=8.0, seed=3)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy = run_experiment("tempo", spec=spec, warmup=32)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    fresh = run(ExperimentSpec(scheduler="tempo", workload=spec,
+                               warmup=32))
+    assert json.dumps(legacy.row(), sort_keys=True) == \
+        json.dumps(fresh.row(), sort_keys=True)
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy_f = run_cluster_experiment("tempo", spec=spec, warmup=32,
+                                          router="jsq", n_replicas=2)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    fresh_f = run_cluster(ExperimentSpec(
+        scheduler="tempo", workload=spec, warmup=32,
+        cluster=ClusterSpec(router="jsq", n_replicas=2)))
+    assert json.dumps(legacy_f.fleet.row(), sort_keys=True) == \
+        json.dumps(fresh_f.fleet.row(), sort_keys=True)
+
+
+def test_run_rejects_cluster_spec():
+    with pytest.raises(ValueError, match="use run_cluster"):
+        run(ExperimentSpec(scheduler="tempo", workload=TENANTED,
+                           cluster=ClusterSpec()))
+
+
+# ---------------------------------------------------------------------------
+# deep_research scenario
+# ---------------------------------------------------------------------------
+def test_deep_research_generates_evolving_dags():
+    spec = WorkloadSpec(scenario="deep_research", rate=2.0, duration=20.0,
+                        seed=4, tenant_mix=(0.6, 0.3, 0.1),
+                        research_stages=(3, 6), research_breadth=3)
+    singles, dags = WorkloadGen(spec).generate()
+    assert not singles and len(dags) >= 5
+    widths = set()
+    for dag, stage0 in dags:
+        assert dag.app == "research"
+        assert 2 <= len(dag.stage_sizes) <= 6
+        assert dag.stage_sizes[0] == 1 and dag.stage_sizes[-1] == 1
+        assert all(1 <= n <= 3 for n in dag.stage_sizes[1:-1])
+        widths.update(dag.stage_sizes[1:-1])
+        assert dag.tenant in TENANT_CLASSES
+        assert len(stage0) == 1
+    assert len(widths) > 1, "fan-out never varied across stages"
+    # regenerating from the same spec reproduces the same trees
+    _, dags2 = WorkloadGen(spec).generate()
+    assert [d.stage_sizes for d, _ in dags] == \
+        [d.stage_sizes for d, _ in dags2]
+
+
+def test_deep_research_serves_end_to_end():
+    spec = WorkloadSpec(scenario="deep_research", rate=1.5, duration=16.0,
+                        seed=6, tenant_mix=(0.5, 0.3, 0.2),
+                        system_prompt_len=64, shared_system_frac=0.5)
+    f = run_cluster(ExperimentSpec(
+        scheduler="tempo", workload=spec, warmup=64,
+        cluster=ClusterSpec(router="tenant", n_replicas=2)))
+    assert f.fleet.n_finished > 0
+    assert f.fleet.per_tenant

@@ -13,7 +13,8 @@ import pytest
 from repro.obs import (NULL, NULL_TRACER, MetricsRegistry, Tracer,
                        parse_prometheus, to_prometheus)
 from repro.obs.export import dump_all
-from repro.serving.run import run_cluster_experiment, run_experiment
+from repro.serving.run import (BackendSpec, ClusterSpec, ExperimentSpec,
+                               TelemetrySpec, run, run_cluster)
 from repro.serving.workload import WorkloadSpec
 
 SPEC = WorkloadSpec(rate=8.0, duration=10.0, seed=1)
@@ -120,15 +121,17 @@ def test_prometheus_parser_rejects_malformed(bad):
 # Engine integration: disabled path, trace completeness, summary columns
 # ---------------------------------------------------------------------------
 def test_disabled_telemetry_default_allocates_no_instruments():
-    s = run_experiment("gmg", spec=SPEC)
+    s = run(ExperimentSpec(scheduler="gmg", workload=SPEC))
     assert len(NULL.instruments()) == 0
     assert s.n_finished > 0
 
 
 def test_gmg_run_metrics_and_trace_complete(tmp_path):
     obs, tracer = MetricsRegistry(), Tracer()
-    s = run_experiment("gmg", spec=SPEC, obs=obs, tracer=tracer,
-                       metrics_out=str(tmp_path))
+    s = run(ExperimentSpec(
+        scheduler="gmg", workload=SPEC,
+        telemetry=TelemetrySpec(obs=obs, tracer=tracer,
+                                metrics_out=str(tmp_path))))
     # core engine metrics exist and are consistent with the summary
     assert obs.value_of("engine_finished_total") == s.n_finished
     assert obs.value_of("engine_admitted_total") >= s.n_finished
@@ -153,7 +156,7 @@ def test_gmg_run_metrics_and_trace_complete(tmp_path):
 
 
 def test_summary_rows_carry_telemetry_columns():
-    s = run_experiment("gmg", spec=SPEC)
+    s = run(ExperimentSpec(scheduler="gmg", workload=SPEC))
     row = s.row()
     for col in ("deferrals", "quanta", "resid_p50", "resid_p95"):
         assert col in row
@@ -163,8 +166,10 @@ def test_summary_rows_carry_telemetry_columns():
 
 def test_cluster_metrics_labeled_per_replica(tmp_path):
     obs = MetricsRegistry()
-    fs = run_cluster_experiment("gmg", spec=SPEC, n_replicas=2, obs=obs,
-                                metrics_out=str(tmp_path))
+    fs = run_cluster(ExperimentSpec(
+        scheduler="gmg", workload=SPEC,
+        cluster=ClusterSpec(n_replicas=2),
+        telemetry=TelemetrySpec(obs=obs, metrics_out=str(tmp_path))))
     for rid in (0, 1):
         assert obs.find("engine_kv_used_frac", replica=rid)
     assert obs.find("router_routed_total")
@@ -179,7 +184,7 @@ def test_cluster_metrics_labeled_per_replica(tmp_path):
 # ---------------------------------------------------------------------------
 def test_gmg_sim_overhead_under_5_percent():
     spec = WorkloadSpec(rate=8.0, duration=8.0, seed=2)
-    run_experiment("gmg", spec=spec)           # warm caches/imports
+    run(ExperimentSpec(scheduler="gmg", workload=spec))  # warm caches
 
     def measure(reps):
         """Interleaved best-of-N: drift and noisy-neighbor load hit the
@@ -187,11 +192,13 @@ def test_gmg_sim_overhead_under_5_percent():
         t_off, t_on = math.inf, math.inf
         for _ in range(reps):
             t0 = time.perf_counter()
-            run_experiment("gmg", spec=spec)
+            run(ExperimentSpec(scheduler="gmg", workload=spec))
             t_off = min(t_off, time.perf_counter() - t0)
             t0 = time.perf_counter()
-            run_experiment("gmg", spec=spec, obs=MetricsRegistry(),
-                           tracer=Tracer())
+            run(ExperimentSpec(
+                scheduler="gmg", workload=spec,
+                telemetry=TelemetrySpec(obs=MetricsRegistry(),
+                                        tracer=Tracer())))
             t_on = min(t_on, time.perf_counter() - t0)
         return t_on / t_off
 
@@ -216,12 +223,12 @@ def _digest_jax_run(telemetry: bool):
     kw = dict(arch="tinyllama-1.1b", num_blocks=64, page=16, max_len=128,
               seed=0)
     backend = make_backend("jax", kw)
-    extra = dict(obs=MetricsRegistry(), tracer=Tracer()) if telemetry \
-        else {}
-    s = run_experiment("tempo", spec=spec,
-                       engine_cfg=EngineConfig(max_batch=8,
-                                               prefill_budget=32),
-                       backend=backend, backend_kwargs=kw, **extra)
+    tel = TelemetrySpec(obs=MetricsRegistry(), tracer=Tracer()) \
+        if telemetry else TelemetrySpec()
+    s = run(ExperimentSpec(
+        scheduler="tempo", workload=spec,
+        engine=EngineConfig(max_batch=8, prefill_budget=32),
+        backend=BackendSpec(kind=backend, kwargs=kw), telemetry=tel))
     streams = sorted((rid, tuple(t)) for rid, t in
                      backend.generated.items())
     return hashlib.sha256(repr(streams).encode()).hexdigest(), s.row()
@@ -246,8 +253,10 @@ def test_jax_stream_digest_identical_with_telemetry():
 def test_dashboard_report_renders(tmp_path):
     from repro.launch.dashboard import render_report, write_report
     obs, tracer = MetricsRegistry(), Tracer()
-    run_experiment("gmg", spec=SPEC, obs=obs, tracer=tracer,
-                   metrics_out=str(tmp_path))
+    run(ExperimentSpec(
+        scheduler="gmg", workload=SPEC,
+        telemetry=TelemetrySpec(obs=obs, tracer=tracer,
+                                metrics_out=str(tmp_path))))
     path = write_report(str(tmp_path))
     text = open(path).read()
     assert text.count("<svg") >= 3              # timeline, census, KV

@@ -12,7 +12,7 @@ except ModuleNotFoundError:   # property tests degrade to sampling
 from repro.core.baselines import make_scheduler
 from repro.serving.engine import EngineConfig, ServeEngine, SimBackend
 from repro.serving.kvcache import BlockManager, page_hash_chain
-from repro.serving.run import run_experiment
+from repro.serving.run import ExperimentSpec, run
 from repro.serving.workload import WorkloadGen, WorkloadSpec
 
 STREAM = (np.arange(4096) * 131 + 17) % 256     # shared token universe
@@ -184,9 +184,9 @@ def test_blockmanager_refcount_invariants(ops):
 def _run_scenario(scenario, cache, **kw):
     spec = WorkloadSpec(scenario=scenario, seed=0, system_prompt_len=64,
                         shared_system_frac=0.5, **kw)
-    return run_experiment("sarathi", spec=spec,
-                          engine_cfg=EngineConfig(prefix_cache=cache),
-                          warmup=0)
+    return run(ExperimentSpec(
+        scheduler="sarathi", workload=spec,
+        engine=EngineConfig(prefix_cache=cache), warmup=0))
 
 
 def test_multiturn_prefix_cache_cuts_prefill_and_keeps_goodput():
@@ -216,11 +216,12 @@ def test_prefix_cache_noop_without_identity():
     """Legacy workloads carry no prompt_tokens: cache on must be
     bit-identical to cache off."""
     spec = WorkloadSpec(rate=2.0, duration=30.0, seed=5)
-    on = run_experiment("sarathi", spec=spec,
-                        engine_cfg=EngineConfig(prefix_cache=True), warmup=0)
-    off = run_experiment("sarathi", spec=spec,
-                         engine_cfg=EngineConfig(prefix_cache=False),
-                         warmup=0)
+    on = run(ExperimentSpec(scheduler="sarathi", workload=spec,
+                            engine=EngineConfig(prefix_cache=True),
+                            warmup=0))
+    off = run(ExperimentSpec(scheduler="sarathi", workload=spec,
+                             engine=EngineConfig(prefix_cache=False),
+                             warmup=0))
     assert on.prefix_lookups == 0
     assert on.service_gain == pytest.approx(off.service_gain)
     assert on.makespan == pytest.approx(off.makespan)

@@ -21,7 +21,7 @@ from repro.serving.engine import (SPEC_EWMA_FLOOR, EngineConfig,
                                   ServeEngine)
 from repro.serving.kvcache import BlockManager
 from repro.serving.request import Request, SLOSpec
-from repro.serving.run import run_experiment
+from repro.serving.run import BackendSpec, ExperimentSpec, run
 from repro.serving.workload import WorkloadSpec
 
 
@@ -205,10 +205,12 @@ def test_cost_model_spec_off_unperturbed():
 # Engine + SimBackend
 # ---------------------------------------------------------------------------
 def _sim_run(depth, accept=0.7, rate=2.0):
-    return run_experiment(
-        "tempo", spec=WorkloadSpec(rate=rate, duration=10.0, seed=0),
-        engine_cfg=EngineConfig(spec_depth_max=depth),
-        backend=SimBackend.for_model("llama-8b", spec_accept_rate=accept))
+    return run(ExperimentSpec(
+        scheduler="tempo",
+        workload=WorkloadSpec(rate=rate, duration=10.0, seed=0),
+        engine=EngineConfig(spec_depth_max=depth),
+        backend=BackendSpec(kind=SimBackend.for_model(
+            "llama-8b", spec_accept_rate=accept))))
 
 
 def test_sim_spec_finishes_same_requests_faster():
